@@ -1,0 +1,32 @@
+"""Kernel micro-benchmarks (interpret mode on CPU; numbers are for CI
+tracking, not TPU performance — the roofline story lives in EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _bench(fn, *args, iters=3, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    _ = np.asarray(out if not isinstance(out, dict) else out[list(out)[0]])
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def kernels():
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    out = {}
+    data = rng.integers(0, 2, (4096, 64)).astype(np.int32)
+    out["secded_encode_4096w_us"] = round(_bench(ops.secded_encode, data), 1)
+    bursts = rng.integers(0, 2, (1024, 576)).astype(np.int32)
+    out["diva_shuffle_1024b_us"] = round(_bench(ops.diva_shuffle, bursts), 1)
+    rf = np.linspace(0, 1, 256)
+    out["rc_transient_256c_us"] = round(_bench(ops.rc_transient, rf, rf), 1)
+    r, k, v, w = (rng.normal(0, 0.3, (2, 128, 4, 32)).astype(np.float32) for _ in range(4))
+    u = rng.normal(0, 0.1, (4, 32)).astype(np.float32)
+    out["wkv6_2x128x4x32_us"] = round(_bench(ops.wkv6, r, k, v, w, u), 1)
+    return out

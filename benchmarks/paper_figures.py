@@ -1,0 +1,256 @@
+"""One function per paper table/figure. Each returns (derived_dict, wall_s).
+
+The derived values are the quantities the paper's figure conveys; run.py
+prints them as CSV and EXPERIMENTS.md quotes them next to the paper's
+numbers.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.errors import DimmModel, expected_row_profile, vulnerability_ratio
+from repro.core.geometry import SMALL, FULL
+from repro.core.latency import vendor_models
+from repro.core.mapping import estimate_row_mapping, mapping_confidences
+from repro.core.population import make_population
+from repro.core.profiling import (ALDRAM, conventional_profile, diva_profile,
+                                  diva_test_bytes, latency_reduction,
+                                  profiling_time_s)
+from repro.core.timing import STANDARD
+from repro.core import ramlite, shuffling, spice
+
+
+def _timed(fn):
+    t0 = time.time()
+    out = fn()
+    return out, time.time() - t0
+
+
+def fig6_row_sweep():
+    """Erroneous-request count vs tRP in {12.5, 10, 7.5, 5} ns (85C/256ms)."""
+    def run():
+        d = DimmModel(SMALL, vendor_models(SMALL)["A"], serial=0)
+        tot = {t: int(d.row_error_counts("trp", t, refresh_ms=256.0).sum())
+               for t in (12.5, 10.0, 7.5, 5.0)}
+        return {"errors@12.5": tot[12.5], "errors@10.0": tot[10.0],
+                "errors@7.5": tot[7.5], "errors@5.0": tot[5.0],
+                "paper": "0 / small / strong-variation / saturated"}
+    return _timed(run)
+
+
+def fig7_periodicity():
+    """Error counts repeat per mat (512-row chunks)."""
+    def run():
+        d = DimmModel(SMALL, vendor_models(SMALL)["A"], serial=0)
+        c = d.row_error_counts("trp", 7.5, refresh_ms=256.0, internal_order=True)
+        per = c.reshape(SMALL.subarrays, SMALL.rows_per_mat)
+        cors = [np.corrcoef(per[0], per[i])[0, 1] for i in range(1, SMALL.subarrays)]
+        return {"cross_subarray_corr_mean": round(float(np.mean(cors)), 3),
+                "paper": "clear periodicity every 512 rows"}
+    return _timed(run)
+
+
+def fig8_column_sweep():
+    """Per-column error counts: jumps at mat boundaries (precharge control)."""
+    def run():
+        d = DimmModel(SMALL, vendor_models(SMALL)["A"], serial=0)
+        c = d.column_error_counts("trp", 7.5, refresh_ms=256.0)
+        per_mat = c.reshape(SMALL.mats_x, -1).sum(axis=1)
+        jump = float(per_mat.max() / max(per_mat.min(), 1.0))
+        worst = int(np.argmax(per_mat))
+        return {"worst_mat": worst, "max_min_ratio": round(jump, 2),
+                "interior_worst": bool(0 < worst < SMALL.mats_x - 1),
+                "paper": "jumps at specific columns; worst mat interior (Fig 9)"}
+    return _timed(run)
+
+
+def fig11_row_mapping():
+    """Confidence of the estimated external->internal row mapping."""
+    def run():
+        vms = vendor_models(SMALL)
+        confs, exact = [], 0
+        for serial in range(8):
+            d = DimmModel(SMALL, vms["A"], serial=serial)
+            exp = expected_row_profile(d, "trp", 7.5, refresh_ms=256.0)
+            ext = d.row_error_counts("trp", 7.5, refresh_ms=256.0)[:SMALL.rows_per_mat]
+            res = estimate_row_mapping(ext, exp)
+            confs.append(mapping_confidences(res))
+            exact += tuple(r["ext_bit"] for r in res) == vms["A"].scramble.perm
+        confs = np.stack(confs)
+        return {"mean_confidence": round(float(confs.mean()), 3),
+                "exact_perm_recovered": f"{exact}/8",
+                "paper": "same mapping for same-design DIMMs, conf < 100%"}
+    return _timed(run)
+
+
+def fig12_burst_bits():
+    """Error count vs data-out bit position (64-bit burst)."""
+    def run():
+        d = DimmModel(SMALL, vendor_models(SMALL)["A"], serial=0)
+        c = d.burst_bit_error_counts("trp", 7.5, refresh_ms=256.0)
+        per_bit = c.sum(axis=0)
+        chips_corr = np.corrcoef(c)[np.triu_indices(SMALL.chips, 1)].mean()
+        return {"max_bit_errors": int(per_bit.max()), "min_bit_errors": int(per_bit.min()),
+                "chip_profile_corr": round(float(chips_corr), 3),
+                "paper": "large variation across bits; chips share the trend"}
+    return _timed(run)
+
+
+def fig13_operating_conditions():
+    """Temperature / refresh-interval sensitivity of total error count."""
+    def run():
+        d = DimmModel(SMALL, vendor_models(SMALL)["A"], serial=0)
+        e85 = d.row_error_counts("trp", 7.5, temp_C=85.0).sum()
+        e45 = d.row_error_counts("trp", 7.5, temp_C=45.0).sum()
+        e64 = d.row_error_counts("trp", 7.5, refresh_ms=64.0).sum()
+        e256 = d.row_error_counts("trp", 7.5, refresh_ms=256.0).sum()
+        return {"count_45C_over_85C": round(float(e45 / max(e85, 1)), 4),
+                "count_64ms_over_256ms": round(float(e64 / max(e256, 1)), 3),
+                "paper": "~0.10 (90% drop with -40C); ~0.85 (15% with 4x refresh)"}
+    return _timed(run)
+
+
+def fig14_population():
+    """Vulnerability ratio across the 96-DIMM population."""
+    def run():
+        import dataclasses
+        pop = make_population(SMALL, 96)
+        vrs, no_var = [], 0
+        for d in pop:
+            counts = d.row_error_counts("trp", 7.5, refresh_ms=256.0)
+            # "no observed variation" (24 DIMMs in the paper): the die's
+            # variation window falls between two 2.5 ns grid steps; what
+            # remains is flat random-outlier noise. Detect it by comparing
+            # against the design-only expectation.
+            design_only = dataclasses.replace(d.vendor, outlier_rate=0.0)
+            d2 = DimmModel(d.geom, design_only, serial=d.serial)
+            exp_design = d2.row_error_counts("trp", 7.5, refresh_ms=256.0,
+                                             sample=False).sum()
+            if exp_design < 0.2 * max(counts.sum(), 1):
+                no_var += 1
+                continue
+            vrs.append(vulnerability_ratio(counts))
+        vrs = np.array(vrs)
+        return {"n_dimms": 96, "n_no_variation": int(no_var),
+                "vr_median": round(float(np.median(vrs)), 1),
+                "vr_max": round(float(vrs.max()), 1),
+                "paper": "24 no-variation DIMMs; VR up to ~5800"}
+    return _timed(run)
+
+
+def fig17_shuffling():
+    """Correctable-error fraction with/without DIVA Shuffling (72 DIMM-configs)."""
+    def run():
+        rng = np.random.default_rng(7)
+        gains, f_ns, f_s = [], [], []
+        for trial in range(72):
+            prob = np.full((9, 64), 2e-5)
+            # design-vulnerable burst positions shared across chips
+            start = rng.integers(0, 56)
+            width = rng.integers(4, 12)
+            level = rng.uniform(0.005, 0.04)
+            prob[:, start:start + width] = level
+            g = shuffling.shuffling_gain(prob, n_accesses=400, seed=int(trial))
+            gains.append(g["gain"])
+            f_ns.append(g["frac_no_shuffle"])
+            f_s.append(g["frac_shuffle"])
+        return {"mean_gain": round(float(np.mean(gains)), 3),
+                "mean_frac_no_shuffle": round(float(np.mean(f_ns)), 3),
+                "mean_frac_shuffle": round(float(np.mean(f_s)), 3),
+                "paper": "+26% of errors become correctable on average"}
+    return _timed(run)
+
+
+def fig18_latency_reduction():
+    """Read/write latency reduction: DIVA vs AL-DRAM at 55C / 85C."""
+    def run():
+        d = DimmModel(SMALL, vendor_models(SMALL)["A"], serial=0)
+        out = {}
+        for temp in (55.0, 85.0):
+            tp = diva_profile(d, temp_C=temp)
+            lr = latency_reduction(tp)
+            out[f"diva_read_{int(temp)}C"] = round(lr["read_reduction"], 3)
+            out[f"diva_write_{int(temp)}C"] = round(lr["write_reduction"], 3)
+        al = ALDRAM.install(d)
+        lr = latency_reduction(al.timing(55.0))
+        out["aldram_read_55C"] = round(lr["read_reduction"], 3)
+        out["paper"] = "DIVA 35.1%/57.8% read/write @55C; AL-DRAM 33.0%/55.2%"
+        return out
+    return _timed(run)
+
+
+def fig19_performance():
+    """System performance with DIVA timings (Ramulator-lite)."""
+    def run():
+        d = DimmModel(SMALL, vendor_models(SMALL)["A"], serial=0)
+        tp = diva_profile(d, temp_C=85.0)
+        out = {}
+        for cores in (1, 2, 4, 8):
+            s = ramlite.speedup_summary(tp, STANDARD, cores=cores,
+                                        n_requests=6000)
+            key = "mean_singlecore_speedup" if cores == 1 else "mean_weighted_speedup"
+            out[f"speedup_{cores}core"] = round(s[key], 4)
+        out["paper"] = "9.2%/14.7%/13.7%/13.8% for 1/2/4/8 cores @85C"
+        return out
+    return _timed(run)
+
+
+def appA_profiling_cost():
+    """Profiling time: conventional vs DIVA (4GB DDR3-1600)."""
+    def run():
+        conv = profiling_time_s(4 * 2 ** 30)
+        diva = profiling_time_s(diva_test_bytes(4 * 2 ** 30))
+        return {"conventional_ms": round(conv * 1e3, 2),
+                "diva_ms": round(diva * 1e3, 3), "ratio": int(conv / diva),
+                "paper": "625 ms vs 1.22 ms (512x)"}
+    return _timed(run)
+
+
+def appB_spice():
+    """Circuit-level validation: distance -> latency slopes."""
+    def run():
+        co = spice.fit_latency_coefficients()
+        import jax.numpy as jnp
+        res = spice.simulate(jnp.array([0.05, 0.95]), jnp.array([0.0, 0.0]),
+                             t_precharge_at_ns=12.0)
+        rv = spice.restored_voltage(res, 12.0)
+        return {"t_sense_near_ns": round(co["t0_ns"], 2),
+                "k_bitline_ns": round(co["k_bl_ns"], 2),
+                "k_wordline_ns": round(co["k_wl_ns"], 2),
+                "restore_loss_far_mV": round(float(rv[0] - rv[1]) * 1e3, 1),
+                "paper": "near cells sense earlier/restore more (Fig 21)"}
+    return _timed(run)
+
+
+def table2_4_population_profile():
+    """Appendix D flavor: per-vendor profiled timings at 55C."""
+    def run():
+        pop = make_population(SMALL, 24)  # a sample of the population
+        out = {}
+        for v in "ABC":
+            dimms = [d for d in pop if d.vendor.name == v][:4]
+            reds = [latency_reduction(diva_profile(d, temp_C=55.0))["read_reduction"]
+                    for d in dimms]
+            out[f"vendor_{v}_read_reduction_mean"] = round(float(np.mean(reds)), 3)
+        out["paper"] = "per-DIMM tables (App. D); same-die similarity"
+        return out
+    return _timed(run)
+
+
+FIGURES = {
+    "fig6_row_sweep": fig6_row_sweep,
+    "fig7_periodicity": fig7_periodicity,
+    "fig8_column_sweep": fig8_column_sweep,
+    "fig11_row_mapping": fig11_row_mapping,
+    "fig12_burst_bits": fig12_burst_bits,
+    "fig13_operating_conditions": fig13_operating_conditions,
+    "fig14_population": fig14_population,
+    "fig17_shuffling": fig17_shuffling,
+    "fig18_latency_reduction": fig18_latency_reduction,
+    "fig19_performance": fig19_performance,
+    "appA_profiling_cost": appA_profiling_cost,
+    "appB_spice": appB_spice,
+    "table2_4_population_profile": table2_4_population_profile,
+}

@@ -1,0 +1,40 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (the derived column is a compact
+key=value report of the figure's quantities vs the paper's claims).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig18]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter")
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks.paper_figures import FIGURES
+
+    print("name,us_per_call,derived")
+    for name, fn in FIGURES.items():
+        if args.only and args.only not in name:
+            continue
+        derived, wall = fn()
+        blob = ";".join(f"{k}={v}" for k, v in derived.items())
+        print(f"{name},{wall * 1e6:.0f},{blob}", flush=True)
+
+    if not args.skip_kernels and (not args.only or "kernel" in args.only):
+        from benchmarks.kernel_bench import kernels
+        for k, v in kernels().items():
+            print(f"kernel_{k},{v},interpret-mode")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Batched serving demo: prefill + greedy decode over three architectures
+(dense GQA, attention-free RWKV6, encoder-decoder Whisper), plus an int8
+KV-cache variant.
+
+Run:  PYTHONPATH=src python examples/serve_demo.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+
+def main():
+    from repro.configs.registry import get_smoke_config
+    from repro.data.pipeline import make_batch
+    from repro.launch.serve import generate
+    from repro.models import model as model_mod
+
+    for arch in ("qwen2.5-3b", "rwkv6-1.6b", "whisper-medium"):
+        cfg = get_smoke_config(arch)
+        params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+        batch = make_batch(cfg, 2, 24, seed=0, step=0)
+        batch["tokens"] = batch["tokens"][:, :-1]
+        toks, stats = generate(cfg, params, batch, max_new=12)
+        print(f"{arch:16s} generated {tuple(toks.shape)} "
+              f"prefill={stats['prefill_s']:.2f}s decode={stats['tok_per_s']:.1f} tok/s")
+
+    # int8 KV cache (the decode_32k hillclimb knob) on the dense arch
+    cfg = get_smoke_config("deepseek-7b").replace(kv_quant=True)
+    params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, 2, 24, seed=0, step=0)
+    batch["tokens"] = batch["tokens"][:, :-1]
+    toks, stats = generate(cfg, params, batch, max_new=12)
+    print(f"{'deepseek-7b+kvq8':16s} generated {tuple(toks.shape)} "
+          f"decode={stats['tok_per_s']:.1f} tok/s (int8 KV cache)")
+    assert np.isfinite(np.asarray(toks)).all()
+
+
+if __name__ == "__main__":
+    main()

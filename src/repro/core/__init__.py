@@ -1,0 +1,8 @@
+"""DIVA-DRAM core: the paper's contribution, faithfully simulated in JAX."""
+from repro.core.timing import CYCLE_NS, PARAMS, STANDARD, TimingParams, timing_grid
+from repro.core.geometry import DimmGeometry, FULL, SMALL, TINY, RowScramble
+from repro.core.latency import VendorModel, vendor_models, t_req_grid, fail_probability
+from repro.core.errors import DimmModel, vulnerability_ratio
+from repro.core.profiling import (ALDRAM, DivaProfiler, conventional_profile,
+                                  diva_profile, latency_reduction, profiling_time_s)
+from repro.core import ecc, shuffling, spice, ramlite

@@ -1,0 +1,103 @@
+"""SECDED Hamming(72,64) — Hsiao code, bit-parallel in JAX.
+
+Codewords are represented as (N, 72) 0/1 arrays: 64 data bits + 8 check
+bits. The parity-check matrix H (72x8) uses odd-weight columns (56 weight-3 +
+8 weight-5 for data, identity for checks), so:
+  syndrome == 0            -> clean
+  syndrome == column_i     -> single-bit error at i (correct it)
+  otherwise (even weight)  -> double-bit error (detected, uncorrectable)
+
+Encode/decode are (N,64)@(64,8) mod-2 matmuls — MXU-friendly; the Pallas
+kernel in kernels/secded.py tiles exactly this computation, with this module
+as its oracle.
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+
+DATA_BITS = 64
+CHECK_BITS = 8
+CODE_BITS = DATA_BITS + CHECK_BITS
+
+
+def _hsiao_columns() -> np.ndarray:
+    """64 distinct odd-weight (>=3) 8-bit columns for the data positions."""
+    cols = []
+    for w in (3, 5):
+        for comb in itertools.combinations(range(CHECK_BITS), w):
+            v = np.zeros(CHECK_BITS, np.int32)
+            v[list(comb)] = 1
+            cols.append(v)
+            if len(cols) == DATA_BITS:
+                return np.stack(cols)
+    raise AssertionError
+
+
+H_DATA = _hsiao_columns()                     # (64, 8)
+H_FULL = np.concatenate([H_DATA, np.eye(CHECK_BITS, dtype=np.int32)])  # (72, 8)
+# syndrome value -> error position lookup (syndromes as packed ints)
+_POW2 = 1 << np.arange(CHECK_BITS)
+_SYN_TO_POS = np.full(256, -1, np.int32)
+for _i, _c in enumerate(H_FULL):
+    _SYN_TO_POS[int((_c * _POW2).sum())] = _i
+
+
+def encode(data_bits):
+    """(N, 64) 0/1 -> (N, 72) codewords."""
+    data_bits = jnp.asarray(data_bits, jnp.int32)
+    checks = (data_bits @ jnp.asarray(H_DATA)) % 2
+    return jnp.concatenate([data_bits, checks], axis=-1)
+
+
+def syndrome(code_bits):
+    """(N, 72) -> (N, 8)."""
+    code_bits = jnp.asarray(code_bits, jnp.int32)
+    return (code_bits @ jnp.asarray(H_FULL)) % 2
+
+
+def decode(code_bits):
+    """(N, 72) -> (data (N,64), status (N,)) with status:
+    0 = clean, 1 = corrected single-bit, 2 = uncorrectable (DED)."""
+    code_bits = jnp.asarray(code_bits, jnp.int32)
+    syn = syndrome(code_bits)                      # (N, 8)
+    syn_val = (syn * jnp.asarray(_POW2)).sum(-1)   # (N,)
+    pos = jnp.asarray(_SYN_TO_POS)[syn_val]        # (N,) -1 if not single
+    clean = syn_val == 0
+    single = (~clean) & (pos >= 0)
+    flip = jnp.where(single[:, None],
+                     jnp.arange(CODE_BITS)[None, :] == pos[:, None], False)
+    fixed = jnp.where(flip, 1 - code_bits, code_bits)
+    status = jnp.where(clean, 0, jnp.where(single, 1, 2)).astype(jnp.int32)
+    return fixed[:, :DATA_BITS], status
+
+
+# ----------------------------------------------------------- byte helpers
+
+def bytes_to_bits(b: np.ndarray) -> np.ndarray:
+    """uint8 (N, 8) -> (N, 64) bit planes (LSB first)."""
+    return np.unpackbits(b, axis=-1, bitorder="little").astype(np.int32)
+
+
+def bits_to_bytes(bits: np.ndarray) -> np.ndarray:
+    return np.packbits(np.asarray(bits, np.uint8), axis=-1, bitorder="little")
+
+
+def protect_bytes(data: bytes) -> np.ndarray:
+    """Encode a byte string into (N, 9) uint8 codeword rows (8 data + 1 ECC)."""
+    pad = (-len(data)) % 8
+    arr = np.frombuffer(data + b"\0" * pad, np.uint8).reshape(-1, 8)
+    code = np.asarray(encode(bytes_to_bits(arr)))
+    return np.concatenate([arr, bits_to_bytes(code[:, DATA_BITS:])], axis=1)
+
+
+def recover_bytes(protected: np.ndarray, n_bytes: int) -> tuple[bytes, np.ndarray]:
+    """Inverse of protect_bytes; returns (data, status per codeword)."""
+    data_bits = bytes_to_bits(np.ascontiguousarray(protected[:, :8]))
+    check_bits = bytes_to_bits(np.ascontiguousarray(protected[:, 8:]))[:, :CHECK_BITS]
+    code = np.concatenate([data_bits, check_bits], axis=1)
+    fixed, status = decode(code)
+    by = bits_to_bytes(np.asarray(fixed)).reshape(-1)
+    return by.tobytes()[:n_bytes], np.asarray(status)

@@ -1,0 +1,208 @@
+"""Monte-Carlo error injection for a simulated DIMM (Section 4 methodology).
+
+A ``DimmModel`` carries geometry + vendor model + per-chip/per-DIMM seeds.
+Tests follow the paper: write a row-stripe pattern (+inverse), reduce ONE
+timing parameter, wait a refresh interval, verify; 10 iterations; errors are
+aggregated per external row / per column / per burst bit.
+
+Everything is computed on (mats_x, rows, cols) probability grids; counts are
+binomially sampled so different iterations/DIMMs decorrelate realistically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.geometry import DimmGeometry, burst_bit_to_mat
+from repro.core.latency import (PATTERN_STRESS, VendorModel, fail_probability,
+                                t_req_grid)
+from repro.core.timing import STANDARD, TimingParams
+
+DEFAULT_PATTERNS = ("0000", "0101", "0011", "1001")
+DEFAULT_ITERS = 10
+
+
+@dataclass
+class DimmModel:
+    geom: DimmGeometry
+    vendor: VendorModel
+    serial: int = 0  # per-DIMM seed
+    age_years: float = 0.0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(1000 + self.serial)
+        # per-chip timing offsets (process variation across chips of a DIMM)
+        self.chip_offsets = rng.normal(0.0, self.vendor.chip_sigma, self.geom.chips)
+        # per-subarray offsets (process variation across the die)
+        self.sub_offsets = rng.normal(0.0, self.vendor.chip_sigma / 2, self.geom.subarrays)
+        # post-manufacturing row repair: repaired rows get a fresh random
+        # profile (they were remapped to redundant rows elsewhere)
+        n_rows = self.geom.rows_per_mat
+        self.repaired = rng.random((self.geom.subarrays, n_rows)) < self.vendor.repair_rate
+        self.repair_perm = rng.integers(0, n_rows, (self.geom.subarrays, n_rows))
+        self._rng = rng
+
+    # ---------------------------------------------------------------- grids
+
+    def fail_prob_grid(self, param: str, t_op: float, *, temp_C=85.0,
+                       refresh_ms=64.0, pattern="0101", chip: int = 0,
+                       subarray: int = 0) -> np.ndarray:
+        """(mats_x, rows, cols) failure probability for one chip/subarray,
+        indexed by INTERNAL row order."""
+        t = t_req_grid(self.geom, self.vendor, param, temp_C=temp_C,
+                       refresh_ms=refresh_ms, age_years=self.age_years,
+                       pattern=pattern)
+        t = t + self.chip_offsets[chip] + self.sub_offsets[subarray]
+        p = fail_probability(t, t_op, self.vendor.sigma)
+        # heavy-tail weak cells: random outliers with extra required latency
+        # (the scattered single-bit errors that ECC absorbs — Sec 6.1/App C)
+        p_out = fail_probability(t + self.vendor.outlier_ns, t_op, self.vendor.sigma)
+        p = (1.0 - self.vendor.outlier_rate) * p + self.vendor.outlier_rate * p_out
+        # row repair: repaired rows take the profile of their replacement row
+        rep = self.repaired[subarray]
+        perm = self.repair_perm[subarray]
+        p[:, rep, :] = p[:, perm[rep], :]
+        return p
+
+    # ------------------------------------------------------------- per-row
+
+    def row_error_counts(self, param: str, t_op: float, *, temp_C=85.0,
+                         refresh_ms=64.0, patterns=DEFAULT_PATTERNS,
+                         iters=DEFAULT_ITERS, internal_order: bool = False,
+                         sample: bool = True) -> np.ndarray:
+        """Error counts per external row address (per subarray concatenated),
+        aggregated over mats, columns, chips, patterns and iterations.
+
+        With ``internal_order=True`` rows are reported in internal
+        (distance-ordered) addressing — what the scramble hides (Sec 5.3).
+        """
+        R = self.geom.rows_per_mat
+        out = np.zeros(self.geom.subarrays * R)
+        for sub in range(self.geom.subarrays):
+            exp_row = np.zeros(R)
+            for pat in patterns:
+                # pattern + inverse both tested: ~2x trials
+                p = self.fail_prob_grid(param, t_op, temp_C=temp_C,
+                                        refresh_ms=refresh_ms, pattern=pat,
+                                        subarray=sub)
+                exp_row += 2 * p.sum(axis=(0, 2)) * self.geom.chips
+            n_trials = iters
+            lam = exp_row * n_trials
+            counts = self._rng.poisson(lam) if sample else lam
+            if not internal_order:
+                ext = self.vendor.scramble.int_to_ext(np.arange(R))
+                ext_counts = np.zeros(R)
+                ext_counts[ext] = counts
+                counts = ext_counts
+            out[sub * R:(sub + 1) * R] = counts
+        return out
+
+    # ---------------------------------------------------------- per-column
+
+    def column_error_counts(self, param: str, t_op: float, *, rows=16,
+                            temp_C=85.0, refresh_ms=64.0,
+                            patterns=DEFAULT_PATTERNS, iters=DEFAULT_ITERS,
+                            per_row: bool = False) -> np.ndarray:
+        """Error counts vs column address across ``rows`` test rows (Sec 5.2:
+        'we test all columns in only 16 rows'). Column address c maps to
+        (mat = c // cols_per_cmd..., within-mat col) — we report the mats
+        concatenated along the column axis so the Fig 8 mat-boundary jumps
+        are visible."""
+        g = self.geom
+        row_sel = self._rng.integers(0, g.rows_per_mat, rows)
+        cnt = np.zeros((rows, g.mats_x * 8)) if per_row else np.zeros(g.mats_x * 8)
+        # 8 column strides per mat sampled (128 column commands per row in the
+        # paper's setup)
+        col_sel = np.linspace(0, g.cols_per_mat - 1, 8).astype(int)
+        for pat in patterns:
+            p = self.fail_prob_grid(param, t_op, pattern=pat, temp_C=temp_C,
+                                    refresh_ms=refresh_ms)
+            sub = p[:, row_sel][:, :, col_sel]  # (mats, rows, 8)
+            lam = 2 * iters * self.geom.chips * np.moveaxis(sub, 0, 1).reshape(rows, -1)
+            if per_row:
+                cnt += self._rng.poisson(lam)
+            else:
+                cnt += self._rng.poisson(lam).sum(axis=0)
+        return cnt
+
+    # --------------------------------------------------------- per-burst-bit
+
+    def burst_bit_error_counts(self, param: str, t_op: float, *, temp_C=85.0,
+                               refresh_ms=64.0, iters=DEFAULT_ITERS,
+                               n_accesses: int = 2000) -> np.ndarray:
+        """(chips, 64) expected error counts per data-out bit position
+        (Fig 12): bit j reads from mat burst_bit_to_mat(j) at a column
+        position that advances within the mat."""
+        g = self.geom
+        out = np.zeros((g.chips, g.burst_bits))
+        bits = np.arange(g.burst_bits)
+        mats = burst_bit_to_mat(g, bits)
+        within = bits % g.bits_per_mat_in_burst
+        cols = (within * (g.cols_per_mat // g.bits_per_mat_in_burst)
+                + g.cols_per_mat // (2 * g.bits_per_mat_in_burst))
+        rows = self._rng.integers(0, g.rows_per_mat, n_accesses)
+        for chip in range(g.chips):
+            p = self.fail_prob_grid(param, t_op, temp_C=temp_C,
+                                    refresh_ms=refresh_ms, chip=chip)
+            lam = iters * p[mats, :, :][:, rows, :][np.arange(64), :, cols].sum(axis=1)
+            out[chip] = self._rng.poisson(lam)
+        return out
+
+    # ----------------------------------------------------------- aggregates
+
+    def total_errors(self, param: str, t_op: float, **kw) -> int:
+        return int(self.row_error_counts(param, t_op, **kw).sum())
+
+    def region_has_errors(self, param: str, t_op: float, internal_rows,
+                          *, temp_C=85.0, refresh_ms=64.0,
+                          patterns=DEFAULT_PATTERNS, iters=DEFAULT_ITERS,
+                          multibit_only: bool = False) -> bool:
+        """Monte-Carlo test of a row subset (used by profiling).
+
+        ``multibit_only=True`` is the DIVA+ECC criterion (Sec 6.1): the
+        profiled timing must produce no MULTI-bit errors per 72-bit codeword;
+        random single-bit failures are SECDED-correctable and tolerated.
+
+        Sampling uses a per-query deterministic RNG so repeated profiles of
+        the same DIMM at the same operating point agree.
+        """
+        import zlib
+        rng = np.random.default_rng(
+            zlib.crc32(f"{self.serial}-{param}-{round(t_op * 4)}-{multibit_only}".encode()))
+        for sub in range(self.geom.subarrays):
+            for pat in patterns:
+                p = self.fail_prob_grid(param, t_op, pattern=pat, subarray=sub,
+                                        temp_C=temp_C, refresh_ms=refresh_ms)
+                region = p[:, internal_rows, :]
+                if not multibit_only:
+                    lam = 2 * iters * self.geom.chips * region.sum()
+                    if rng.poisson(lam) > 0:
+                        return True
+                else:
+                    # P(>=2 errors in a 72-bit codeword) with per-bit prob ~p;
+                    # each cell contributes 1/72 of a codeword, so the sum of
+                    # per-cell p_multi is divided by the codeword width.
+                    q = np.clip(region, 0.0, 1.0)
+                    p_multi = np.clip(1 - (1 - q) ** 72 - 72 * q * (1 - q) ** 71, 0.0, 1.0)
+                    lam = max(2 * iters * self.geom.chips * float(p_multi.sum()) / 72.0, 0.0)
+                    if rng.poisson(lam) > 0:
+                        return True
+        return False
+
+
+def expected_row_profile(dimm: "DimmModel", param: str, t_op: float, *,
+                         temp_C=85.0, refresh_ms=64.0) -> np.ndarray:
+    """Model-expected per-internal-row error counts for one subarray (the
+    'expected characteristics' of Sec 3.1 used by the mapping estimator)."""
+    return dimm.row_error_counts(param, t_op, temp_C=temp_C,
+                                 refresh_ms=refresh_ms, internal_order=True,
+                                 sample=False)[:dimm.geom.rows_per_mat]
+
+
+def vulnerability_ratio(row_counts: np.ndarray, frac: float = 0.1) -> float:
+    """Fig 14 metric: errors in the top 10% most- vs least-vulnerable rows."""
+    s = np.sort(row_counts)
+    k = max(1, int(len(s) * frac))
+    lo, hi = s[:k].sum(), s[-k:].sum()
+    return float(hi / max(lo, 1.0))

@@ -1,0 +1,137 @@
+"""Per-cell *required* timing model (ns) — the quantitative heart of DIVA.
+
+t_req(cell, param) =
+    base[param]
+  + k_bl[param]  * bitline_distance(row, col parity)        (Fig 3)
+  + k_wl[param]  * wordline_distance(col)                   (Fig 4)
+  + k_mat[param] * mat_position_delay(mat_x)                (Figs 4, 9)
+  + temp/refresh/aging adders                               (Sec 5.5, 6.1)
+  + process-variation noise  ~ N(0, sigma)                  (Sec 6.1, App C)
+
+The directional coefficients are the SPICE-lite slopes from core/spice.py
+scaled per timing parameter; vendors differ in coefficients, scrambling, and
+noise — giving the Appendix-D population structure (same die version =>
+similar design-induced variation; process noise on top).
+
+A cell operated at t_op fails with probability Phi((t_req_det - t_op)/sigma)
+— the analytic fold of per-cell Gaussian noise, which lets us evaluate whole
+DIMMs as (mats_x, rows, cols) probability grids instead of sampling billions
+of cells.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.geometry import (DimmGeometry, RowScramble, bitline_distance,
+                                 precharge_delay, vendor_scramble, wordline_distance)
+from repro.core.timing import PARAMS, STANDARD, TimingParams
+
+
+@dataclass(frozen=True)
+class VendorModel:
+    name: str
+    die: str
+    # per timing parameter coefficients (ns); anchored at 85C so that the
+    # worst-region required tRP ~ 7.8 ns (errors appear at the paper's 10 ns
+    # point only in the tail, strong variation at 7.5 ns, near-total failure
+    # at 5 ns — Fig 6) and tRCD ~ 6.6 ns.
+    base: dict = field(default_factory=lambda: dict(trcd=3.3, tras=13.0, trp=3.85, twr=1.3))
+    k_bl: dict = field(default_factory=lambda: dict(trcd=1.5, tras=4.5, trp=2.2, twr=1.0))
+    k_wl: dict = field(default_factory=lambda: dict(trcd=0.8, tras=1.0, trp=0.35, twr=0.4))
+    k_mat: dict = field(default_factory=lambda: dict(trcd=0.7, tras=1.0, trp=0.9, twr=0.4))
+    # monotone row-index term: rows farther from the row predecoder see a
+    # later local-wordline rise — breaks the open-bitline mirror symmetry
+    # (this is what makes Fig 10/11's mapping estimation well-posed)
+    k_row: dict = field(default_factory=lambda: dict(trcd=0.3, tras=0.5, trp=0.4, twr=0.3))
+    sigma: float = 0.15          # per-cell process noise (ns)
+    chip_sigma: float = 0.10     # per-chip offset (ns)
+    temp_coef: float = 0.040     # ns per degC above/below the 85C anchor
+    refresh_coef: float = 0.040  # ns per doubling of the refresh interval
+    aging_coef: float = 0.50     # ns per year of wearout (Sec 6.1 fn.2)
+    outlier_rate: float = 3e-6   # heavy-tail weak cells (random, ECC's job)
+    outlier_ns: float = 3.5      # extra required latency of a weak cell
+    repair_rate: float = 0.01    # fraction of rows remapped post-manufacturing
+    scramble: RowScramble | None = None
+
+    def with_scramble(self, n_bits: int, seed: int = 0) -> "VendorModel":
+        import dataclasses
+        return dataclasses.replace(self, scramble=vendor_scramble(self.name + self.die, n_bits, seed))
+
+
+def vendor_models(geom: DimmGeometry) -> dict[str, VendorModel]:
+    """Three vendors; B's dies often show little tRCD variation and a sharp
+    tRP cliff (Sec 5.6: 'Vendor B has drastically high error counts ... when
+    tRCD is reduced below a certain value')."""
+    nb = int(np.log2(geom.rows_per_mat))
+    A = VendorModel("A", "C").with_scramble(nb, 1)
+    B = VendorModel(
+        "B", "K",
+        base=dict(trcd=5.1, tras=13.5, trp=3.6, twr=1.5),
+        k_bl=dict(trcd=0.15, tras=3.6, trp=2.4, twr=1.0),
+        k_wl=dict(trcd=0.05, tras=0.9, trp=0.5, twr=0.5),
+        k_mat=dict(trcd=0.05, tras=0.6, trp=1.3, twr=0.4),
+        sigma=0.20,
+    ).with_scramble(nb, 2)
+    C = VendorModel(
+        "C", "E",
+        base=dict(trcd=3.2, tras=12.5, trp=3.95, twr=1.2),
+        k_bl=dict(trcd=1.7, tras=4.8, trp=1.9, twr=1.2),
+        k_wl=dict(trcd=0.9, tras=0.9, trp=0.3, twr=0.5),
+        k_mat=dict(trcd=1.0, tras=0.8, trp=0.8, twr=0.3),
+        sigma=0.13,
+    ).with_scramble(nb, 3)
+    return {"A": A, "B": B, "C": C}
+
+
+# Data patterns (Section 4): row-stripe patterns stress bitlines differently.
+PATTERN_STRESS = {"0000": 0.90, "0101": 1.00, "0011": 0.96, "1001": 0.94}
+
+
+def t_req_grid(geom: DimmGeometry, vm: VendorModel, param: str, *,
+               temp_C: float = 85.0, refresh_ms: float = 64.0,
+               age_years: float = 0.0, pattern: str = "0101") -> np.ndarray:
+    """Deterministic required timing, shape (mats_x, rows_per_mat, cols_per_mat)."""
+    R, C, M = geom.rows_per_mat, geom.cols_per_mat, geom.mats_x
+    rows = np.arange(R)[None, :, None]
+    cols = np.arange(C)[None, None, :]
+    mx = np.arange(M)[:, None, None]
+    d_bl = bitline_distance(geom, rows, cols)                     # (1,R,C)
+    d_wl = wordline_distance(geom, cols)                          # (1,1,C)
+    d_mat = precharge_delay(geom, np.arange(M))[:, None, None]    # (M,1,1)
+
+    stress = PATTERN_STRESS[pattern]
+    d_row = rows / (R - 1)
+    var = (vm.k_bl[param] * d_bl + vm.k_wl[param] * d_wl + vm.k_mat[param] * d_mat
+           + vm.k_row[param] * d_row)
+    t = vm.base[param] + stress * var
+    t = t + vm.temp_coef * (temp_C - 85.0)
+    t = t + vm.refresh_coef * np.log2(max(refresh_ms, 1.0) / 64.0)
+    t = t + vm.aging_coef * age_years
+    return t.astype(np.float32)
+
+
+def fail_probability(t_req_det: np.ndarray, t_op: float, sigma: float) -> np.ndarray:
+    """P(cell fails) = Phi((t_req_det - t_op)/sigma) (Gaussian noise fold)."""
+    from math import sqrt
+    z = (t_req_det - t_op) / max(sigma, 1e-6)
+    # stable erf-based normal CDF
+    return 0.5 * (1.0 + _erf(z / sqrt(2.0)))
+
+
+def _erf(x):
+    # Abramowitz-Stegun 7.1.26 vectorized (keeps numpy-only dependency)
+    sign = np.sign(x)
+    x = np.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * x)
+    y = 1.0 - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+                - 0.284496736) * t + 0.254829592) * t * np.exp(-x * x)
+    return sign * y
+
+
+def worst_rows_internal(geom: DimmGeometry) -> np.ndarray:
+    """Internal (distance-ordered) row indices of the design-induced slowest
+    rows in a mat: the edge rows (open-bitline: both ends host the
+    max-distance cells of alternating bitlines)."""
+    return np.array([0, geom.rows_per_mat - 1])

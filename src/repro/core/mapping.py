@@ -1,0 +1,81 @@
+"""Reverse-engineering the external->internal row mapping (Section 5.3).
+
+The paper hypothesises the scramble is a bit permutation + XOR and picks the
+assignment that makes error counts follow the design-expected profile,
+reporting per-bit confidence (Fig 10/11). Our estimator works on single-bit
+signatures, which is robust to the open-bitline V-shape:
+
+  * signature of an address bit = the mean error-count difference between
+    rows with that bit set vs clear;
+  * internal bits are matched to external bits by signature magnitude (each
+    internal bit has a distinct magnitude: the MSB splits near/far halves —
+    large difference; the LSB splits even/odd neighbours — tiny difference);
+  * confidence of a matched pair = the fraction of the 2^(n-1) row pairs
+    differing ONLY in that external bit whose observed ordering agrees with
+    the design-expected ordering.
+
+Process variation, outlier cells and row repair perturb pair orderings, so
+confidence stays below 100% and decays toward the LSBs — Fig 11's shape.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _bit_signature(counts: np.ndarray, nbits: int) -> np.ndarray:
+    sig = np.zeros(nbits)
+    idx = np.arange(len(counts))
+    for b in range(nbits):
+        one = (idx >> b) & 1 == 1
+        sig[b] = counts[one].mean() - counts[~one].mean()
+    return sig
+
+
+def estimate_row_mapping(counts_ext: np.ndarray, expected_int: np.ndarray):
+    """counts_ext: observed per-external-row error counts (one subarray).
+    expected_int: model-expected per-internal-row counts (design order).
+
+    Returns a list over internal bits: {int_bit, ext_bit, xor, confidence}.
+    """
+    n = len(counts_ext)
+    nbits = int(np.log2(n))
+    assert 2 ** nbits == n == len(expected_int)
+    sig_obs = _bit_signature(counts_ext, nbits)
+    sig_exp = _bit_signature(expected_int, nbits)
+
+    # match by magnitude, strongest first (greedy assignment)
+    order_int = np.argsort(-np.abs(sig_exp))
+    order_ext = list(np.argsort(-np.abs(sig_obs)))
+    assign = {}
+    for rank, i in enumerate(order_int):
+        b = order_ext[rank]
+        assign[int(i)] = (int(b), int(np.sign(sig_obs[b]) != np.sign(sig_exp[i])))
+
+    # estimated ext->int map from the assignment (for expected pair diffs)
+    idx = np.arange(n)
+    est_int = np.zeros(n, np.int64)
+    for i, (b, xor) in assign.items():
+        est_int |= ((((idx >> b) & 1) ^ xor) << i)
+
+    out = [None] * nbits
+    for i, (b, xor) in assign.items():
+        hi_addr = idx | (1 << b)
+        lo_addr = idx & ~(1 << b)
+        sel = (idx >> b) & 1 == 0  # each pair once
+        obs_diff = (counts_ext[hi_addr] - counts_ext[lo_addr])[sel]
+        exp_diff = (expected_int[est_int[hi_addr]] - expected_int[est_int[lo_addr]])[sel]
+        # Poisson noise floor per pair; only design-significant pairs vote
+        noise = 1.0 * np.sqrt(counts_ext[hi_addr][sel] + counts_ext[lo_addr][sel] + 1.0)
+        signif = np.abs(exp_diff) > noise
+        if signif.sum() >= 4:
+            agree = float(np.mean(np.sign(obs_diff[signif]) == np.sign(exp_diff[signif])))
+            conf = agree
+        else:  # bit effect below the noise floor: coin-flip confidence
+            conf = 0.5 + 0.5 * max(float(np.mean(np.sign(obs_diff) == np.sign(exp_diff))) - 0.5, 0.0)
+        out[i] = {"int_bit": int(i), "ext_bit": int(b), "xor": xor,
+                  "confidence": conf, "n_significant_pairs": int(signif.sum())}
+    return out
+
+
+def mapping_confidences(results) -> np.ndarray:
+    return np.array([r["confidence"] for r in results])

@@ -1,0 +1,134 @@
+"""Ramulator-lite: bank-state DRAM timing simulation + multicore IPC model.
+
+Reproduces the *relative* system speedups of Fig 19 (we have no x86/PinPoints
+traces offline — see DESIGN.md section 7). Workloads are (MPKI, row-hit-rate,
+bank-parallelism) tuples spanning the paper's Stream/SPEC/TPC/GUPS range; a
+``lax.scan`` walks a synthetic request trace through per-bank state (open
+row, ready time) under FR-FCFS-ish service rules derived from the four
+timing parameters; IPC follows a standard memory-stall model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.timing import CYCLE_NS, TCL_NS, STANDARD, TimingParams
+
+CPU_GHZ = 3.2  # Table 1
+
+
+@dataclass(frozen=True)
+class Workload:
+    name: str
+    mpki: float           # misses (DRAM requests) per kilo-instruction
+    row_hit_rate: float   # fraction of accesses hitting the open row
+    write_frac: float = 0.3
+    ipc_peak: float = 2.0  # IPC with a perfect memory system
+
+
+# A 2-wide-ish OoO core: memory stalls partially overlap (MLP factor).
+MLP_OVERLAP = 0.55
+
+WORKLOADS = [
+    Workload("stream-copy", 28.0, 0.85, 0.45),
+    Workload("stream-triad", 25.0, 0.80, 0.35),
+    Workload("gups", 32.0, 0.05, 0.50, ipc_peak=1.4),
+    Workload("mcf-like", 18.0, 0.30, 0.15, ipc_peak=1.2),
+    Workload("lbm-like", 14.0, 0.65, 0.40),
+    Workload("libquantum-like", 22.0, 0.75, 0.10),
+    Workload("omnetpp-like", 8.0, 0.40, 0.25, ipc_peak=1.6),
+    Workload("tpcc-like", 10.0, 0.35, 0.30, ipc_peak=1.5),
+    Workload("tpch-like", 12.0, 0.55, 0.20),
+    Workload("soplex-like", 16.0, 0.45, 0.25, ipc_peak=1.4),
+    Workload("milc-like", 11.0, 0.60, 0.35),
+    Workload("low-mem", 1.5, 0.50, 0.30, ipc_peak=2.4),
+]
+
+
+def make_trace(w: Workload, n: int, banks: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    bank = rng.integers(0, banks, n)
+    hit = rng.random(n) < w.row_hit_rate
+    row = np.where(hit, 0, rng.integers(1, 1 << 16, n)).astype(np.int32)
+    is_wr = (rng.random(n) < w.write_frac).astype(np.int32)
+    # inter-arrival: requests per cycle from MPKI & peak IPC
+    rate = w.mpki / 1000.0 * w.ipc_peak
+    gaps = rng.geometric(min(rate, 0.99), n).astype(np.int32)
+    arrive = np.cumsum(gaps).astype(np.int32)
+    return {"bank": bank, "row": row, "write": is_wr, "arrive": arrive}
+
+
+def simulate_trace(trace, t: TimingParams, banks: int = 16) -> dict:
+    """Bank-state walk. Latencies in memory-bus cycles (DDR3-1600)."""
+    tRCD = t.cycles("trcd")
+    tRP = t.cycles("trp")
+    tRAS = t.cycles("tras")
+    tWR = t.cycles("twr")
+    tCL = round(TCL_NS / CYCLE_NS)
+
+    def step(state, req):
+        open_row, ready, act_time = state
+        b, row, wr, arr = req["bank"], req["row"], req["write"], req["arrive"]
+        start = jnp.maximum(arr, ready[b])
+        hit = open_row[b] == row
+        # row miss: precharge (respecting tRAS since activation) + activate
+        pre_ok = jnp.maximum(start, act_time[b] + tRAS)
+        t_act = jnp.where(hit, start, pre_ok + tRP)
+        t_col = jnp.where(hit, start, t_act + tRCD)
+        done = t_col + tCL + jnp.where(wr == 1, tWR, 0)
+        latency = done - arr
+        open_row = open_row.at[b].set(row)
+        ready = ready.at[b].set(done)
+        act_time = act_time.at[b].set(jnp.where(hit, act_time[b], t_act))
+        return (open_row, ready, act_time), latency
+
+    n_banks = banks
+    init = (jnp.full((n_banks,), -1, jnp.int32),
+            jnp.zeros((n_banks,), jnp.int32),
+            jnp.full((n_banks,), -(10 ** 6), jnp.int32))
+    reqs = {k: jnp.asarray(v) for k, v in trace.items()}
+    _, lat = jax.lax.scan(step, init, reqs)
+    return {"avg_latency_cycles": float(jnp.mean(lat)),
+            "p99_latency_cycles": float(jnp.percentile(lat, 99.0))}
+
+
+def ipc(w: Workload, avg_mem_lat_bus_cycles: float) -> float:
+    """Memory-stall IPC model: CPI = CPI_peak + MPKI/1000 * stall_cycles."""
+    lat_cpu_cycles = avg_mem_lat_bus_cycles * (CPU_GHZ * CYCLE_NS)  # bus -> cpu cycles
+    stall = lat_cpu_cycles * (1.0 - MLP_OVERLAP)
+    cpi = 1.0 / w.ipc_peak + w.mpki / 1000.0 * stall
+    return 1.0 / cpi
+
+
+def weighted_speedup(ipcs_new: list[float], ipcs_base: list[float]) -> float:
+    return float(sum(n / b for n, b in zip(ipcs_new, ipcs_base)))
+
+
+def evaluate_system(t: TimingParams, *, n_requests: int = 20000, banks: int = 16,
+                    seed: int = 0) -> dict:
+    """Per-workload IPC under timing t."""
+    out = {}
+    for i, w in enumerate(WORKLOADS):
+        tr = make_trace(w, n_requests, banks, seed + i)
+        res = simulate_trace(tr, t, banks)
+        out[w.name] = ipc(w, res["avg_latency_cycles"])
+    return out
+
+
+def speedup_summary(t_new: TimingParams, t_base: TimingParams = STANDARD,
+                    cores: int = 4, seed: int = 0, **kw) -> dict:
+    base = evaluate_system(t_base, seed=seed, **kw)
+    new = evaluate_system(t_new, seed=seed, **kw)
+    names = list(base)
+    per_wl = {n: new[n] / base[n] for n in names}
+    rng = np.random.default_rng(seed)
+    ws = []
+    for _ in range(32):  # 32 random multi-core mixes (Sec 6.3)
+        mix = rng.choice(names, cores)
+        ws.append(weighted_speedup([new[m] for m in mix], [base[m] for m in mix]) / cores)
+    return {"per_workload_speedup": per_wl,
+            "mean_singlecore_speedup": float(np.mean(list(per_wl.values()))),
+            "mean_weighted_speedup": float(np.mean(ws))}

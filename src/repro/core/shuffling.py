@@ -1,0 +1,88 @@
+"""DIVA Shuffling (Section 6.2): spread design-correlated error bits across
+ECC codewords.
+
+Burst model (Fig 5 / Fig 16): a column command moves 64 bits per chip as 8
+beats x 8 DQ pins. Beat b forms ECC codeword b: the 8 data chips contribute
+8 bits each (64 data bits) and the ECC chip contributes the 8 check bits.
+
+Because chips share the same die design, their high-error burst positions
+coincide — without shuffling, the error-prone bits of all 8 chips land in
+the SAME beat => multi-bit errors in one codeword (SECDED-uncorrectable).
+DIVA Shuffling rotates each chip's bit->beat mapping by its chip index
+(implemented in hardware by wiring chip address bits differently), so
+coincident positions spread over 8 different codewords.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ecc
+
+N_BEATS = 8
+N_DQ = 8
+
+
+def beat_of_bit(bit: np.ndarray, chip: np.ndarray, shuffle: bool) -> np.ndarray:
+    """Which beat (codeword) a chip's burst-bit belongs to."""
+    beat = np.asarray(bit) // N_DQ
+    if shuffle:
+        beat = (beat + np.asarray(chip)) % N_BEATS
+    return beat
+
+
+def assemble_error_masks(chip_errors: np.ndarray, shuffle: bool) -> np.ndarray:
+    """chip_errors: (9, 64) 0/1 error indicators per chip (8 data + 1 ECC) for
+    one column access. Returns (8, 72) per-codeword error masks."""
+    assert chip_errors.shape == (9, 64)
+    masks = np.zeros((N_BEATS, ecc.CODE_BITS), np.int32)
+    for chip in range(9):
+        for bit in range(64):
+            if not chip_errors[chip, bit]:
+                continue
+            b = int(beat_of_bit(bit, chip, shuffle and chip < 8))
+            dq = bit % N_DQ
+            if chip < 8:
+                masks[b, chip * N_DQ + dq] = 1
+            else:  # ECC chip: check bits
+                masks[b, ecc.DATA_BITS + dq] = 1
+    return masks
+
+
+def correctable_stats(chip_errors: np.ndarray, shuffle: bool) -> dict:
+    """SECDED outcome for one access: errors corrected vs escaped."""
+    masks = assemble_error_masks(chip_errors, shuffle)
+    per_cw = masks.sum(axis=1)
+    total = int(per_cw.sum())
+    corrected = int(per_cw[per_cw == 1].sum())
+    return {"total": total, "corrected": corrected,
+            "uncorrectable_words": int((per_cw > 1).sum())}
+
+
+def sample_chip_errors(bit_error_prob: np.ndarray, rng: np.random.Generator,
+                       n_accesses: int) -> np.ndarray:
+    """bit_error_prob: (9, 64) per-bit error probability (from the DIMM's
+    burst-bit profile, Fig 12). Returns (n_accesses, 9, 64) 0/1."""
+    return (rng.random((n_accesses, 9, 64)) < bit_error_prob[None]).astype(np.int32)
+
+
+def shuffling_gain(bit_error_prob: np.ndarray, *, n_accesses: int = 2000,
+                   seed: int = 0) -> dict:
+    """Fig 17 experiment: fraction of errors correctable with and without
+    DIVA Shuffling under SECDED, for one DIMM's burst-bit error profile."""
+    rng = np.random.default_rng(seed)
+    errs = sample_chip_errors(bit_error_prob, rng, n_accesses)
+    tot = corr_ns = corr_s = 0
+    for e in errs:
+        if not e.any():
+            continue
+        s0 = correctable_stats(e, shuffle=False)
+        s1 = correctable_stats(e, shuffle=True)
+        tot += s0["total"]
+        corr_ns += s0["corrected"]
+        corr_s += s1["corrected"]
+    if tot == 0:
+        return {"total": 0, "frac_no_shuffle": 1.0, "frac_shuffle": 1.0, "gain": 0.0}
+    return {"total": tot,
+            "frac_no_shuffle": corr_ns / tot,
+            "frac_shuffle": corr_s / tot,
+            "gain": (corr_s - corr_ns) / tot}

@@ -1,0 +1,154 @@
+"""Appendix B analogue: RC-ladder transient simulation of a DRAM bitline.
+
+We model a bitline as an N-segment RC ladder with the sense amplifier at
+node 0 and a cell capacitor attached at the tap corresponding to its row.
+Three phases (Fig 21): charge sharing (wordline opens the access transistor,
+delayed by the wordline RC for far columns), sense amplification (cross-
+coupled amp modeled as saturating positive feedback at node 0), precharge
+(equalizer pulls the ladder back to VDD/2).
+
+Units: volts, ns, kOhm, fF (kOhm x fF = 1e-3 ns). Explicit Euler with
+``lax.scan``; dt is kept below half the fastest time constant for stability.
+
+The observable outputs reproduce the paper's qualitative claims: cells
+farther from the sense amplifier (larger tap index) and farther from the
+wordline driver (longer wordline arrival) sense later (label A, Fig 21a),
+restore less charge under a fixed tRAS (label B), and precharge slower
+(label C). ``fit_latency_coefficients`` extracts ns-scale slopes used by
+core/latency.py. The Pallas kernel in kernels/rc_transient.py implements the
+same integrator tiled over cells and is validated against ``simulate``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CircuitParams:
+    vdd: float = 1.2
+    v_half: float = 0.6
+    c_cell_fF: float = 24.0
+    c_bl_fF: float = 144.0        # total bitline capacitance [Vogelsang]
+    r_bl_kohm: float = 15.0       # total bitline resistance
+    r_acc_kohm: float = 10.0      # access transistor on-resistance
+    n_seg: int = 8
+    wl_delay_ns_max: float = 2.5  # wordline RC arrival delay at the far column
+    sa_gain_per_ns: float = 0.30  # sense-amp regeneration rate (V/ns at full drive)
+    sa_enable_ns: float = 1.5     # sensing starts while signal still develops
+    precharge_tau_ns: float = 0.5 # equalizer time constant (applied at the SA node)
+    dt_ns: float = 0.01
+
+    @property
+    def tau_seg_ns(self) -> float:
+        return (self.r_bl_kohm / self.n_seg) * (self.c_bl_fF / self.n_seg) * 1e-3
+
+
+def simulate(row_frac, col_frac, *, t_total_ns: float = 45.0,
+             t_precharge_at_ns: float = 30.0, cp: CircuitParams = CircuitParams(),
+             cell_charged: bool = True):
+    """Simulate cells at normalized bitline distance ``row_frac`` in [0,1] and
+    wordline distance ``col_frac`` in [0,1] (arrays broadcast together).
+
+    Returns {"t_ns", "v_sa" (bitline @ sense amp), "v_cell"} with a trailing
+    time axis.
+    """
+    row_frac = jnp.asarray(row_frac, jnp.float32)
+    col_frac = jnp.asarray(col_frac, jnp.float32)
+    row_frac, col_frac = jnp.broadcast_arrays(row_frac, col_frac)
+    shape = row_frac.shape
+
+    n = cp.n_seg
+    c_seg = cp.c_bl_fF / n
+    tau_seg = cp.tau_seg_ns                      # neighbor equilibration
+    tau_acc_cell = cp.r_acc_kohm * cp.c_cell_fF * 1e-3   # cell side
+    tau_acc_node = cp.r_acc_kohm * c_seg * 1e-3          # bitline-node side
+    assert cp.dt_ns <= 0.49 * min(tau_seg, tau_acc_cell, tau_acc_node, cp.precharge_tau_ns), \
+        "explicit Euler stability"
+
+    tap = jnp.clip(jnp.round(row_frac * (n - 1)).astype(jnp.int32), 0, n - 1)
+    tap_oh = jax.nn.one_hot(tap, n, dtype=jnp.float32)
+    t_wl = col_frac * cp.wl_delay_ns_max
+
+    v_bl0 = jnp.full(shape + (n,), cp.v_half, jnp.float32)
+    v_cell0 = jnp.full(shape, cp.vdd if cell_charged else 0.0, jnp.float32)
+    steps = int(t_total_ns / cp.dt_ns)
+
+    def step(carry, i):
+        v_bl, v_cell = carry
+        t = i.astype(jnp.float32) * cp.dt_ns
+        # RC ladder diffusion (reflecting ends)
+        left = jnp.concatenate([v_bl[..., :1], v_bl[..., :-1]], axis=-1)
+        right = jnp.concatenate([v_bl[..., 1:], v_bl[..., -1:]], axis=-1)
+        dv = (left - 2 * v_bl + right) / tau_seg
+        # access transistor (wordline soft turn-on after its RC arrival;
+        # the wordline closes when precharge starts)
+        wl_on = jax.nn.sigmoid((t - t_wl) / 0.3) * jnp.where(t < t_precharge_at_ns, 1.0, 0.0)
+        v_tap = jnp.sum(v_bl * tap_oh, axis=-1)
+        dv_cell = wl_on * (v_tap - v_cell) / tau_acc_cell
+        dv = dv + tap_oh * (wl_on * (v_cell - v_tap) / tau_acc_node)[..., None]
+        # sense amplifier at node 0 (regenerative): enabled early, while the
+        # signal from far taps is still diffusing toward the SA — this race is
+        # the bitline-direction latency mechanism
+        sa_on = jnp.where((t >= cp.sa_enable_ns) & (t < t_precharge_at_ns), 1.0, 0.0)
+        v0 = v_bl[..., 0]
+        regen = cp.sa_gain_per_ns * jnp.tanh((v0 - cp.v_half) * 25.0) * sa_on
+        dv = dv.at[..., 0].add(regen)
+        # precharge: the equalizer sits at the SA; far nodes settle through
+        # the ladder (the tRP distance mechanism)
+        pre = jnp.where(t >= t_precharge_at_ns, 1.0, 0.0)
+        dv = dv.at[..., 0].add(pre * (cp.v_half - v0) / cp.precharge_tau_ns)
+        v_bl = jnp.clip(v_bl + dv * cp.dt_ns, 0.0, cp.vdd)
+        v_cell = jnp.clip(v_cell + dv_cell * cp.dt_ns, 0.0, cp.vdd)
+        # the paper probes the bitline *near the accessed cell* (Fig 21)
+        v_probe = jnp.sum(v_bl * tap_oh, axis=-1)
+        return (v_bl, v_cell), (v0, v_probe, v_cell)
+
+    (_, _), (v_sa, v_probe, v_cell) = jax.lax.scan(step, (v_bl0, v_cell0), jnp.arange(steps))
+    t_ns = np.arange(steps) * cp.dt_ns
+    return {"t_ns": t_ns, "v_sa": jnp.moveaxis(v_sa, 0, -1),
+            "v_probe": jnp.moveaxis(v_probe, 0, -1), "v_cell": jnp.moveaxis(v_cell, 0, -1)}
+
+
+def sense_time(res, v_ready: float = 0.9):
+    """Time for the bitline near the accessed cell to reach v_ready (App. B
+    probes the bitline 'measured near the accessed cells')."""
+    v = np.asarray(res["v_probe"])
+    t = np.asarray(res["t_ns"])
+    reached = v >= v_ready
+    idx = np.argmax(reached, axis=-1)
+    ok = reached.any(axis=-1)
+    return np.where(ok, t[idx], np.inf)
+
+
+def restored_voltage(res, t_ras_ns: float = 30.0):
+    """Cell voltage right before precharge (restoration quality, label B)."""
+    t = np.asarray(res["t_ns"])
+    i = max(int(np.searchsorted(t, t_ras_ns)) - 1, 0)
+    return np.asarray(res["v_cell"])[..., i]
+
+
+def precharge_time(res, t_pre_ns: float = 30.0, tol: float = 0.02):
+    """Time after precharge start for the whole bitline (both ends) to return
+    to VDD/2 +- tol — the next row anywhere on the bitline needs this."""
+    t = np.asarray(res["t_ns"])
+    dev = np.abs(np.asarray(res["v_probe"]) - 0.6)
+    settled = (dev <= tol) & (t >= t_pre_ns)
+    # require it to STAY settled: find the last unsettled time after t_pre
+    unsettled = (~settled) & (t >= t_pre_ns)
+    has_un = unsettled.any(axis=-1)
+    last_un = t[dev.shape[-1] - 1 - np.argmax(unsettled[..., ::-1], axis=-1)]
+    return np.where(has_un, last_un - t_pre_ns + res["t_ns"][1], 0.0)
+
+
+def fit_latency_coefficients(cp: CircuitParams = CircuitParams()):
+    """Slopes (ns per unit normalized distance) of sense time along the
+    bitline/wordline directions — physical inputs for core/latency.py."""
+    res = simulate(jnp.array([0.05, 0.95, 0.05]), jnp.array([0.0, 0.0, 1.0]), cp=cp)
+    ts = sense_time(res)
+    return {"t0_ns": float(ts[0]),
+            "k_bl_ns": float(ts[1] - ts[0]) / 0.9,
+            "k_wl_ns": float(ts[2] - ts[0])}

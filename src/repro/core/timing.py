@@ -1,0 +1,61 @@
+"""DRAM timing parameters (DDR3-1600 defaults, per the paper's Section 4).
+
+Standard values 13.75/35.0/13.75/15.0 ns for tRCD/tRAS/tRP/tWR [Micron
+MT41J512M8]; the testing infrastructure reduces them on a grid down to 5 ns
+(2.5 ns steps — the FPGA quantization the paper reports, which explains the 24
+no-variation DIMMs in Fig 14).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+CYCLE_NS = 1.25  # DDR3-1600 clock period
+TCL_NS = 13.75  # CAS latency, fixed (not swept by the paper)
+PARAMS = ("trcd", "tras", "trp", "twr")
+
+
+@dataclass(frozen=True)
+class TimingParams:
+    trcd: float = 13.75
+    tras: float = 35.0
+    trp: float = 13.75
+    twr: float = 15.0
+
+    def replace(self, **kw) -> "TimingParams":
+        return dataclasses.replace(self, **kw)
+
+    def as_dict(self) -> dict[str, float]:
+        return {p: getattr(self, p) for p in PARAMS}
+
+    def cycles(self, name: str) -> int:
+        return round(getattr(self, name) / CYCLE_NS)
+
+    # Latency accounting used for Fig 18-style reporting: the read path pays
+    # tRCD + tRAS + tRP (+ fixed tCL); the write path pays tRCD + tWR + tRP.
+    def read_latency_ns(self) -> float:
+        return self.trcd + self.tras + self.trp
+
+    def write_latency_ns(self) -> float:
+        return self.trcd + self.twr + self.trp
+
+    def read_cycles(self) -> int:
+        return round(self.read_latency_ns() / CYCLE_NS)
+
+    def write_cycles(self) -> int:
+        return round(self.write_latency_ns() / CYCLE_NS)
+
+
+STANDARD = TimingParams()
+
+# The FPGA infrastructure's timing grid (Section 4): multiples of the 2.5 ns
+# step below the standard value, down to 5 ns (the paper's tRP points are
+# 12.5/10/7.5/5). tRAS is additionally bounded below by (current tRCD + 10).
+def timing_grid(param: str, step: float = 2.5, floor: float = 5.0) -> list[float]:
+    hi = getattr(STANDARD, param)
+    v = (hi // step) * step  # largest grid point <= standard
+    vals = []
+    while v >= floor - 1e-9:
+        vals.append(round(v, 3))
+        v -= step
+    return vals

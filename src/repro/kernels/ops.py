@@ -1,0 +1,57 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode — the kernel
+body executes as traced JAX ops, validating semantics; on TPU the same calls
+compile to Mosaic. ``use_pallas()`` picks the backend; set REPRO_FORCE_REF=1
+to route everything through the pure-jnp oracles in ref.py.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.rc_transient import rc_transient as _rc_pallas
+from repro.kernels.secded import encode_checks as _enc_pallas
+from repro.kernels.secded import syndrome as _syn_pallas
+from repro.kernels.shuffle import apply_shuffle as _shuf_pallas
+from repro.kernels.wkv6 import wkv6 as _wkv6_pallas
+
+
+def use_pallas() -> bool:
+    return os.environ.get("REPRO_FORCE_REF", "0") != "1"
+
+
+def interpret_mode() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def secded_encode(data_bits):
+    if not use_pallas():
+        return _ref.secded_encode(data_bits)
+    return _enc_pallas(data_bits, interpret=interpret_mode())
+
+
+def secded_syndrome(code_bits):
+    if not use_pallas():
+        return _ref.secded_syndrome(code_bits)
+    return _syn_pallas(code_bits, interpret=interpret_mode())
+
+
+def diva_shuffle(bursts, inverse: bool = False):
+    if not use_pallas():
+        return _ref.diva_shuffle(bursts, inverse)
+    return _shuf_pallas(bursts, inverse=inverse, interpret=interpret_mode())
+
+
+def rc_transient(row_frac, col_frac, **kw):
+    if not use_pallas():
+        return _ref.rc_transient(row_frac, col_frac, **kw)
+    return _rc_pallas(row_frac, col_frac, interpret=interpret_mode(), **kw)
+
+
+def wkv6(r, k, v, wlog, u):
+    if not use_pallas():
+        return _ref.wkv6(r, k, v, wlog, u)
+    return _wkv6_pallas(r, k, v, wlog, u, interpret=interpret_mode())

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ecc as _ecc
+from repro.core import spice as _spice
+from repro.kernels import shuffle as _shuffle_mod
+from repro.models.rwkv6 import wkv6_scan as _wkv6_scan
+
+
+def secded_encode(data_bits):
+    """(N, 64) -> (N, 8) check bits."""
+    code = _ecc.encode(data_bits)
+    return code[:, _ecc.DATA_BITS:]
+
+
+def secded_syndrome(code_bits):
+    return _ecc.syndrome(code_bits)
+
+
+def diva_shuffle(bursts, inverse: bool = False):
+    perm = _shuffle_mod.shuffle_permutation()
+    bursts = jnp.asarray(bursts, jnp.int32)
+    if inverse:
+        inv = np.zeros_like(perm)
+        inv[perm] = np.arange(len(perm))
+        return bursts[:, inv]
+    return bursts[:, perm]
+
+
+def rc_transient(row_frac, col_frac, *, cp=_spice.CircuitParams(),
+                 t_total_ns: float = 45.0, t_pre_ns: float = 30.0,
+                 v_ready: float = 0.9, cell_charged: bool = True, **_):
+    res = _spice.simulate(jnp.asarray(row_frac).reshape(-1),
+                          jnp.asarray(col_frac).reshape(-1),
+                          t_total_ns=t_total_ns, t_precharge_at_ns=t_pre_ns,
+                          cp=cp, cell_charged=cell_charged)
+    sense = _spice.sense_time(res, v_ready)
+    return {"v_probe": np.asarray(res["v_probe"])[..., -1],
+            "v_cell": np.asarray(res["v_cell"])[..., -1],
+            "sense_t": sense}
+
+
+def wkv6(r, k, v, wlog, u):
+    y, _ = _wkv6_scan(jnp.asarray(r), jnp.asarray(k), jnp.asarray(v),
+                      jnp.asarray(wlog), jnp.asarray(u, jnp.float32))
+    return y

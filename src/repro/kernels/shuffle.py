@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: DIVA Shuffling as a permutation matmul.
+
+A burst is 9 chips x 64 bits = 576 bit lanes; DIVA Shuffling is a fixed
+permutation of those lanes (chip i's beat rotated by i). Dynamic gathers are
+awkward on the TPU vector unit, so the kernel applies the permutation as a
+(TILE_N, 576) @ (576, 576) 0/1 matmul — the MXU eats it, and the permutation
+matrix is built once from core/shuffling.beat_of_bit. The inverse permutation
+(deshuffle) is the transpose.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.shuffling import N_DQ, beat_of_bit
+
+LANES = 9 * 64
+TILE_N = 256
+
+
+def shuffle_permutation() -> np.ndarray:
+    """perm[i] = source lane for output lane i (output = burst laid out as
+    (beat, chip, dq) with shuffling applied; identity layout without)."""
+    perm = np.zeros(LANES, np.int32)
+    for chip in range(9):
+        for bit in range(64):
+            beat = int(beat_of_bit(bit, chip, shuffle=chip < 8))
+            dq = bit % N_DQ
+            out_lane = beat * 72 + chip * N_DQ + dq
+            perm[out_lane] = chip * 64 + bit
+    return perm
+
+
+def permutation_matrix(perm: np.ndarray) -> np.ndarray:
+    m = np.zeros((LANES, LANES), np.float32)
+    m[perm, np.arange(LANES)] = 1.0
+    return m
+
+
+def _permute_kernel(x_ref, p_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (TILE_N, 576)
+    p = p_ref[...]                               # (576, 576)
+    o_ref[...] = jnp.dot(x, p, preferred_element_type=jnp.float32).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("inverse", "interpret", "tile"))
+def apply_shuffle(bursts, *, inverse: bool = False, interpret: bool = True,
+                  tile: int = TILE_N):
+    """bursts: (N, 576) 0/1 int32 lanes -> shuffled (or deshuffled) lanes."""
+    x = jnp.asarray(bursts, jnp.int32)
+    n = x.shape[0]
+    pad = (-n) % tile
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    pm = permutation_matrix(shuffle_permutation())
+    if inverse:
+        pm = pm.T
+    out = pl.pallas_call(
+        _permute_kernel,
+        grid=(x.shape[0] // tile,),
+        in_specs=[pl.BlockSpec((tile, LANES), lambda i: (i, 0)),
+                  pl.BlockSpec((LANES, LANES), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((tile, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], LANES), jnp.int32),
+        interpret=interpret,
+    )(x, jnp.asarray(pm))
+    return out[:n]

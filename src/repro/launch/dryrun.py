@@ -1,0 +1,194 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Do not move them. This flag is dry-run-only: smoke
+# tests and benchmarks see the single real CPU device.
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro import sharding as shd
+from repro.configs.base import SHAPES, shape_applicable
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (active_param_count, collective_bytes,
+                                   param_count, roofline_terms, tokens_per_step)
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _mem_dict(ma):
+    fields = ["generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes", "temp_size_in_bytes"]
+    return {f: int(getattr(ma, f, 0) or 0) for f in fields}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, unroll: bool = True,
+             save_hlo: bool = False, opts: tuple = ()) -> dict:
+    """opts: perf-iteration knobs (EXPERIMENTS.md §Perf):
+      kvq8     - int8 KV cache (+bf16 scales)
+      infer-tp - TP-only param sharding for prefill/decode (no FSDP gathers)
+      a2a      - all-to-all MoE dispatch (env REPRO_MOE_A2A=1, set by main)
+      cap10    - MoE capacity factor 1.0
+      remat-none - disable activation rematerialisation (train)
+    """
+    cfg = get_config(arch)
+    if "kvq8" in opts:
+        cfg = cfg.replace(kv_quant=True)
+    if "cap10" in opts:
+        cfg = cfg.replace(capacity_factor=1.0)
+    if "remat-none" in opts:
+        cfg = cfg.replace(remat="none")
+    infer_fsdp = () if "infer-tp" in opts else ("data",)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "status": "skip",
+           "reason": why}
+    if not ok:
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        batch_shapes = steps_mod.input_specs(cfg, shape)
+        batch_sh = shd.batch_shardings(batch_shapes, mesh)
+
+        if shape.kind == "train":
+            state_shapes = steps_mod.abstract_state(cfg)
+            state_sh = steps_mod.state_shardings(state_shapes, mesh)
+            step = steps_mod.make_train_step(cfg, unroll=unroll)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, steps_mod.metrics_shardings(mesh)),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_shapes, batch_shapes)
+        elif shape.kind == "prefill":
+            state_shapes = steps_mod.abstract_state(cfg)
+            params_sh = shd.param_shardings(state_shapes["params"], mesh, infer_fsdp)
+            cache_shapes = steps_mod.abstract_cache(cfg, shape)
+            cache_sh = shd.cache_shardings(cache_shapes, mesh)
+            step = steps_mod.make_prefill_step(cfg, unroll=unroll, max_seq=shape.seq_len)
+            import jax.numpy as jnp
+            logits_spec = shd.NamedSharding(mesh, shd.data_spec(
+                jax.ShapeDtypeStruct((shape.global_batch, 1, cfg.vocab_size), jnp.float32), mesh))
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh),
+                             out_shardings=(logits_spec, cache_sh))
+            lowered = jitted.lower(state_shapes["params"], batch_shapes)
+        else:  # decode
+            state_shapes = steps_mod.abstract_state(cfg)
+            params_sh = shd.param_shardings(state_shapes["params"], mesh, infer_fsdp)
+            cache_shapes = steps_mod.abstract_cache(cfg, shape)
+            cache_sh = shd.cache_shardings(cache_shapes, mesh)
+            step = steps_mod.make_decode_step(cfg, unroll=unroll)
+            import jax.numpy as jnp
+            tok_sh = shd.NamedSharding(mesh, shd.data_spec(
+                jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32), mesh))
+            jitted = jax.jit(step, in_shardings=(params_sh, cache_sh, batch_sh),
+                             out_shardings=(tok_sh, cache_sh), donate_argnums=(1,))
+            lowered = jitted.lower(state_shapes["params"], cache_shapes, batch_shapes)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        print(mem)  # proves it fits (per-device bytes)
+        cost = compiled.cost_analysis()
+        print({k: cost.get(k) for k in ("flops", "bytes accessed")})
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+
+    n_chips = 512 if multi_pod else 256
+    n_params = param_count(state_shapes["params"])
+    n_active = active_param_count(state_shapes["params"], cfg)
+    toks = tokens_per_step(cfg, shape)
+    terms = roofline_terms(cost, coll, n_chips=1)  # cost/coll are already per-device
+
+    rec.update({
+        "status": "ok",
+        "reason": "",
+        "unroll": unroll,
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": _mem_dict(mem),
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "n_params": int(n_params),
+        "n_active_params": int(n_active),
+        "tokens_per_step": int(toks),
+        "model_flops": float(6.0 * n_active * toks),
+        "roofline": terms,
+        "hlo_bytes": len(hlo),
+    })
+    if save_hlo:
+        hdir = OUT_DIR / "hlo"
+        hdir.mkdir(parents=True, exist_ok=True)
+        (hdir / f"{arch}_{shape_name}_{mesh_name}.txt").write_text(hlo)
+    return rec
+
+
+def cell_path(arch: str, shape_name: str, mesh_name: str) -> Path:
+    return OUT_DIR / mesh_name / f"{arch}__{shape_name}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run: lower+compile every "
+                                 "(arch x shape x mesh) cell and record roofline inputs.")
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", choices=["all", *SHAPES])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true", help="recompute existing cells")
+    ap.add_argument("--scan", action="store_true", help="scan layers instead of unrolling")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--opt", action="append", default=[],
+                    help="perf knobs: kvq8 | infer-tp | a2a | cap10 | remat-none")
+    ap.add_argument("--tag", default="", help="suffix for the output mesh dir")
+    args = ap.parse_args()
+
+    if "a2a" in args.opt:
+        os.environ["REPRO_MOE_A2A"] = "1"
+    if "seq-shard" in args.opt:
+        os.environ["REPRO_SEQ_SHARD"] = "1"
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_fail = 0
+    for multi in meshes:
+        mesh_name = ("multi" if multi else "single") + (f"_{args.tag}" if args.tag else "")
+        for arch in archs:
+            for shape_name in shapes:
+                path = cell_path(arch, shape_name, mesh_name)
+                if path.exists() and not args.force:
+                    print(f"[cached] {mesh_name} {arch} {shape_name}")
+                    continue
+                print(f"[run] {mesh_name} {arch} {shape_name} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, multi, unroll=not args.scan,
+                                   save_hlo=args.save_hlo, opts=tuple(args.opt))
+                except Exception as e:  # record the failure; it is a bug to fix
+                    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                           "status": "fail", "reason": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                path.parent.mkdir(parents=True, exist_ok=True)
+                path.write_text(json.dumps(rec, indent=1))
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skip"
+                n_fail += st == "fail"
+                print(f"  -> {st} {rec.get('reason','')} "
+                      f"(compile {rec.get('compile_s','-')}s)", flush=True)
+    print(f"done: ok={n_ok} skip={n_skip} fail={n_fail}")
+
+
+if __name__ == "__main__":
+    main()

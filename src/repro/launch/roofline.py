@@ -1,0 +1,105 @@
+"""Roofline bookkeeping: HLO collective parsing + the three roofline terms.
+
+Hardware constants (TPU v5e-class target, per assignment):
+  197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+
+``cost_analysis()`` numbers from the CPU dry-run are *per device* (measured:
+an SPMD-partitioned program reports the per-partition cost), so the roofline
+terms divide by per-chip peaks directly. Collective bytes are parsed from the
+post-SPMD HLO text: we sum the operand sizes of every all-gather / all-reduce
+/ reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind from post-SPMD HLO text."""
+    out = {k: 0 for k in ("all-reduce", "all-gather", "reduce-scatter",
+                          "all-to-all", "collective-permute")}
+    counts = dict.fromkeys(out, 0)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:
+            continue  # -done consumes the -start handle; count once at -start
+        kind = m.group(1)
+        # operand shapes are printed inline inside the call parens
+        call = line[m.end():]
+        shapes = _SHAPE_RE.findall(call)
+        if not shapes:  # fall back to the result shape(s) left of '='
+            shapes = _SHAPE_RE.findall(line[: m.start()])
+        out[kind] += sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in counts)
+    out["counts"] = counts
+    return out
+
+
+def roofline_terms(cost: dict, coll: dict, *, n_chips: int = 1) -> dict:
+    """The three terms in seconds (already-per-device inputs => n_chips=1)."""
+    flops = float(cost.get("flops", 0.0)) / n_chips
+    hbm = float(cost.get("bytes accessed", 0.0)) / n_chips
+    cbytes = float(coll.get("total", 0.0)) / n_chips
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm / HBM_BW
+    t_coll = cbytes / ICI_BW
+    dom = max((t_compute, "compute"), (t_memory, "memory"), (t_coll, "collective"))[1]
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory, "t_collective_s": t_coll,
+            "dominant": dom,
+            "roofline_frac": t_compute / max(t_compute, t_memory, t_coll, 1e-30)}
+
+
+def param_count(params_shapes) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params_shapes))
+
+
+def active_param_count(params_shapes, cfg) -> int:
+    """MoE-aware: expert tensors count at k/E of their size (path-name match)."""
+    frac = cfg.experts_per_token / cfg.n_experts if cfg.n_experts else 1.0
+    total = 0
+
+    def visit(path, leaf):
+        nonlocal total
+        keys = [k.key if hasattr(k, "key") else str(k) for k in path]
+        n = int(np.prod(leaf.shape))
+        if any(k in ("wei", "weg", "weo") for k in keys):
+            n = int(n * frac)
+        total += n
+
+    jax.tree_util.tree_map_with_path(visit, params_shapes)
+    return total
+
+
+def tokens_per_step(cfg, shape) -> int:
+    if shape.kind == "train":
+        return shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return shape.global_batch * shape.seq_len
+    return shape.global_batch  # decode: one new token per sequence

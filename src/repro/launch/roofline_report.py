@@ -1,0 +1,64 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dry-run records.
+
+    PYTHONPATH=src python -m repro.launch.roofline_report [--dir single]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+HBM_GB = 16  # v5e per chip
+
+
+def load(mesh_dir: str):
+    recs = []
+    for f in sorted((OUT_DIR / mesh_dir).glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def fmt_row(r) -> str:
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | — | skip | — | — | "
+                f"{r['reason'].split(':')[0]} |")
+    t = r["roofline"]
+    mem = r["memory"]
+    hbm_gb = (mem["argument_size_in_bytes"] + mem["output_size_in_bytes"]
+              - mem["alias_size_in_bytes"]) / 1e9
+    # analytic compute term, independent of lax.scan body-once accounting:
+    # records store MODEL_FLOPS = 6*N_active*D (train fwd+bwd); inference
+    # steps execute only the forward pass (2*N*D = /3)
+    mult = 1.0 if r["shape"].startswith("train") else (1.0 / 3.0)
+    mf = r["model_flops"] * mult
+    t_ana = mf / (r["n_chips"] * PEAK_FLOPS)
+    useful = (mf / r["n_chips"]) / max(r["flops_per_device"], 1e-9)
+    return ("| {arch} | {shape} | {tc:.3f} | {ta:.3f} | {tm:.3f} | {tcol:.3f} | {dom} | "
+            "{frac:.2f} | {useful:.1f} | {hbm:.1f} | {note} |").format(
+        arch=r["arch"], shape=r["shape"], tc=t["t_compute_s"], ta=t_ana,
+        tm=t["t_memory_s"], tcol=t["t_collective_s"], dom=t["dominant"],
+        frac=t["roofline_frac"], useful=useful, hbm=hbm_gb,
+        note="fits" if hbm_gb <= HBM_GB else f"needs {hbm_gb/HBM_GB:.1f}x HBM")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="single")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print(f"Roofline table ({args.dir} mesh, per-chip terms; peaks: "
+          f"{PEAK_FLOPS/1e12:.0f} TF/s, {HBM_BW/1e9:.0f} GB/s HBM, {ICI_BW/1e9:.0f} GB/s link)")
+    print()
+    print("| arch | shape | t_compute HLO (s) | t_compute analytic (s) | t_memory (s) | "
+          "t_collective (s) | dominant | roofline frac | useful-FLOP ratio | "
+          "state GB/chip | fits 16GB? |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

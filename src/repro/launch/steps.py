@@ -1,0 +1,116 @@
+"""Step builders: train_step / prefill_step / decode_step + abstract input specs.
+
+These are the functions the dry-run lowers and the drivers execute. All of
+them are pure (state, batch) -> (state, metrics) style functions suitable for
+jax.jit with explicit in/out shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import cache as cache_mod
+from repro.models import model as model_mod
+from repro.optim import clip_by_global_norm, linear_warmup_cosine
+from repro.optim.optimizers import get_optimizer
+
+
+# ------------------------------------------------------------- input specs
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    train:   tokens (B, S+1) int32 [+ frames/patches stubs]
+    prefill: tokens (B, S) int32 [+ stubs]
+    decode:  tokens (B, 1) int32 (the cache is built separately)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    f32, i32 = jnp.float32, jnp.int32
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S + 1), i32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:  # decode
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+    if cfg.family == "audio" and shape.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), f32)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        # patches count toward seq_len: text tokens = S - n_vision_tokens
+        St = S - cfg.n_vision_tokens
+        tok_len = St + 1 if shape.kind == "train" else St
+        specs["tokens"] = jax.ShapeDtypeStruct((B, tok_len), i32)
+        specs["patches"] = jax.ShapeDtypeStruct((B, cfg.n_vision_tokens, cfg.d_model), f32)
+    return specs
+
+
+def abstract_state(cfg: ModelConfig, seed: int = 0):
+    """Abstract (ShapeDtypeStruct) train state via eval_shape — no allocation."""
+    opt = get_optimizer(cfg.optimizer)
+
+    def init():
+        params = model_mod.init_params(jax.random.PRNGKey(seed), cfg)
+        return {"params": params, "opt": opt.init(params), "step": jnp.zeros((), jnp.int32)}
+
+    return jax.eval_shape(init)
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(functools.partial(cache_mod.init_cache, cfg,
+                                            shape.global_batch, shape.seq_len))
+
+
+# ------------------------------------------------------------- steps
+
+def make_train_step(cfg: ModelConfig, *, unroll: bool = False, base_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10_000, clip_norm: float = 1.0):
+    opt = get_optimizer(cfg.optimizer)
+    lr_fn = linear_warmup_cosine(base_lr, warmup, total_steps)
+
+    def train_step(state, batch):
+        def lfn(params):
+            loss, parts = model_mod.loss_fn(cfg, params, batch, unroll=unroll)
+            return loss, parts
+
+        (loss, parts), grads = jax.value_and_grad(lfn, has_aux=True)(state["params"])
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(state["step"])
+        new_params, new_opt = opt.update(grads, state["opt"], state["params"], lr)
+        new_state = {"params": new_params, "opt": new_opt, "step": state["step"] + 1}
+        metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"],
+                   "gnorm": gnorm, "lr": lr}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, unroll: bool = False, max_seq: int | None = None):
+    def prefill_step(params, batch):
+        return cache_mod.prefill(cfg, params, batch, max_seq=max_seq, unroll=unroll)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, unroll: bool = False):
+    def decode_step(params, cache, batch):
+        logits, new_cache = cache_mod.decode_step(cfg, params, cache, batch["tokens"],
+                                                  unroll=unroll)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+    return decode_step
+
+
+# ------------------------------------------------------------- sharding glue
+
+def state_shardings(state_shapes, mesh, fsdp_axes=("data",)):
+    params_sh = shd.param_shardings(state_shapes["params"], mesh, fsdp_axes)
+    opt_sh = shd.opt_state_shardings(state_shapes["opt"], state_shapes["params"], mesh, fsdp_axes)
+    return {"params": params_sh, "opt": opt_sh, "step": shd.replicated(mesh)}
+
+
+def metrics_shardings(mesh):
+    return shd.replicated(mesh)

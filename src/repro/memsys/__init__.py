@@ -1,0 +1,1 @@
+from repro.memsys.codec import protect_blob, recover_blob, scrub, CodecStats

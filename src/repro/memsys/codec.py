@@ -1,0 +1,82 @@
+"""Reliability codec: SECDED(72,64) + DIVA-style shuffling over byte blobs.
+
+This applies the paper's insight where a training framework has the analogous
+problem: checkpoint shards / host-offloaded state. Each 64-bit word gets an
+8-bit Hsiao code; groups of 8 codewords form a 576-bit "burst".
+
+Threat model: *spatially correlated* corruption — a contiguous run of bits
+(bad host-DRAM region, torn write). In codeword-major layout, any >=2-bit run
+lands in one codeword and defeats SECDED. The DIVA move (Fig 16b: spread
+correlated error bits across codewords) here is bit-level round-robin
+interleaving: stored bit l belongs to codeword l % 8, so a contiguous run of
+up to 8 flipped bits puts at most ONE error in each codeword — fully
+correctable. (core/shuffling.py models the paper's original chip-rotation
+variant for the DRAM burst experiments of Fig 17.)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import ecc
+
+BURST_WORDS = 8          # codewords per interleaved burst
+BURST_LANES = BURST_WORDS * ecc.CODE_BITS  # 576 bit lanes
+
+
+@dataclass
+class CodecStats:
+    codewords: int
+    corrected: int
+    uncorrectable: int
+
+    @property
+    def ok(self) -> bool:
+        return self.uncorrectable == 0
+
+
+def protect_blob(data: bytes, *, shuffle: bool = True) -> np.ndarray:
+    """bytes -> (G, 576) 0/1 int8 stored burst lanes."""
+    words = ecc.protect_bytes(data)              # (N, 9) data+check bytes
+    pad = (-len(words)) % BURST_WORDS
+    if pad:  # zero data -> zero checks: all-zero rows are valid codewords
+        words = np.concatenate([words, np.zeros((pad, 9), np.uint8)])
+    bits = np.unpackbits(words, axis=1, bitorder="little")  # (N, 72)
+    groups = bits.reshape(-1, BURST_WORDS, ecc.CODE_BITS)   # (G, w, pos)
+    if shuffle:  # stored lane l = pos*8 + w  (round-robin across codewords)
+        lanes = np.moveaxis(groups, 1, 2).reshape(-1, BURST_LANES)
+    else:        # codeword-major: lane l = w*72 + pos
+        lanes = groups.reshape(-1, BURST_LANES)
+    return lanes.astype(np.int8)
+
+
+def recover_blob(lanes: np.ndarray, n_bytes: int, *, shuffle: bool = True) -> tuple[bytes, CodecStats]:
+    lanes = np.asarray(lanes, np.uint8)
+    if shuffle:
+        groups = np.moveaxis(lanes.reshape(-1, ecc.CODE_BITS, BURST_WORDS), 2, 1)
+    else:
+        groups = lanes.reshape(-1, BURST_WORDS, ecc.CODE_BITS)
+    code = groups.reshape(-1, ecc.CODE_BITS)
+    fixed, status = ecc.decode(code.astype(np.int32))
+    by = ecc.bits_to_bytes(np.asarray(fixed)).reshape(-1)
+    stats = CodecStats(codewords=len(code),
+                       corrected=int((np.asarray(status) == 1).sum()),
+                       uncorrectable=int((np.asarray(status) == 2).sum()))
+    return by.tobytes()[:n_bytes], stats
+
+
+def corrupt_run(lanes: np.ndarray, *, burst: int, start_lane: int, n_bits: int) -> np.ndarray:
+    """Flip a contiguous run of stored bits — the correlated-corruption model."""
+    out = np.array(lanes, copy=True)
+    sl = slice(start_lane, min(start_lane + n_bits, out.shape[1]))
+    out[burst, sl] ^= 1
+    return out
+
+
+def scrub(lanes: np.ndarray, n_bytes: int, *, shuffle: bool = True) -> tuple[np.ndarray, CodecStats]:
+    """Verify-and-repair pass: decode, re-encode corrected data."""
+    data, stats = recover_blob(lanes, n_bytes, shuffle=shuffle)
+    if stats.corrected and not stats.uncorrectable:
+        return protect_blob(data, shuffle=shuffle), stats
+    return lanes, stats

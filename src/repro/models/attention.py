@@ -1,0 +1,175 @@
+"""GQA attention: full, blockwise (flash-style online softmax), and decode.
+
+Baseline sharding notes (see DESIGN.md section 6): query heads are sharded on
+the "model" mesh axis; KV heads are replicated within a GQA group. The
+blockwise path keeps the (Sq, Skv) score matrix from materialising for 32k+
+prefill; by default it is a ``lax.scan`` over KV chunks, but the dry-run
+unrolls it (``unroll=True``) so that HLO cost analysis sees every chunk.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_norm, apply_rope, dense_init, norm_params
+
+NEG_INF = -1e30
+
+
+def attn_params(key, cfg: ModelConfig, dtype, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    H, KVH, dh, D = cfg.n_heads, cfg.n_kv_heads, cfg.dh, cfg.d_model
+    p = {
+        "ln": norm_params(cfg, dtype),
+        "wq": dense_init(ks[0], D, H * dh, dtype),
+        "wk": dense_init(ks[1], D, KVH * dh, dtype),
+        "wv": dense_init(ks[2], D, KVH * dh, dtype),
+        "wo": dense_init(ks[3], H * dh, D, dtype, scale=1.0 / max(cfg.n_layers, 1) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), dtype)
+        p["bk"] = jnp.zeros((KVH * dh,), dtype)
+        p["bv"] = jnp.zeros((KVH * dh,), dtype)
+    return p
+
+
+def qkv(cfg: ModelConfig, p, x, positions=None):
+    """x: (B, S, D) -> q (B,S,H,dh), k/v (B,S,KVH,dh)."""
+    B, S, _ = x.shape
+    H, KVH, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, KVH, dh)
+    v = v.reshape(B, S, KVH, dh)
+    if cfg.rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    from repro import sharding as shd
+    q = shd.hint_heads_or_seq(q)
+    k = shd.hint(k, "b", None, "m", None)
+    v = shd.hint(v, "b", None, "m", None)
+    return q, k, v
+
+
+def _mask(q_pos, kv_pos, causal: bool, prefix_len: int = 0):
+    """(Sq, Skv) boolean mask. prefix_len: bidirectional prefix (VLM)."""
+    if not causal:
+        return None
+    m = q_pos[:, None] >= kv_pos[None, :]
+    if prefix_len:
+        m = m | (kv_pos[None, :] < prefix_len)
+    return m
+
+
+def full_attention(q, k, v, *, causal=True, q_pos=None, kv_pos=None, prefix_len=0):
+    """q: (B,Sq,H,dh), k/v: (B,Skv,KVH,dh). Materialises scores — short seq only."""
+    B, Sq, H, dh = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / (dh ** 0.5)
+    if q_pos is None:
+        q_pos = jnp.arange(Sq)
+    if kv_pos is None:
+        kv_pos = jnp.arange(k.shape[1])
+    m = _mask(q_pos, kv_pos, causal, prefix_len)
+    if m is not None:
+        scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, dh)
+
+
+def blockwise_attention(q, k, v, *, causal=True, block_kv: int = 2048, prefix_len=0,
+                        unroll: bool = False):
+    """Flash-style attention: online softmax over KV chunks; O(Sq*block) memory.
+
+    ``unroll=True`` replaces the scan with a python loop so the dry-run's HLO
+    cost analysis counts every chunk (lax.scan bodies are counted once).
+    """
+    B, Sq, H, dh = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    nblk = -(-Skv // block_kv)
+    pad = nblk * block_kv - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, block_kv, KVH, dh)
+    vb = v.reshape(B, nblk, block_kv, KVH, dh)
+    qg = (q.reshape(B, Sq, KVH, G, dh).astype(jnp.float32)) / (dh ** 0.5)
+    q_pos = jnp.arange(Sq)
+
+    def chunk(carry, inp):
+        m_prev, l_prev, acc = carry
+        kc, vc, blk = inp
+        kv_pos = blk * block_kv + jnp.arange(block_kv)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kc.astype(jnp.float32))
+        msk = (q_pos[:, None] >= kv_pos[None, :]) if causal else (kv_pos[None, :] < Skv)
+        if causal and prefix_len:
+            msk = msk | (kv_pos[None, :] < prefix_len)
+        if causal:
+            msk = msk & (kv_pos[None, :] < Skv)
+        s = jnp.where(msk[None, :, None, None, :], s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_cur[..., None])
+        corr = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bqhgk,bkhd->bqhgd", p, vc.astype(jnp.float32))
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((B, Sq, KVH, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KVH, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KVH, G, dh), jnp.float32)
+    if unroll:
+        carry = (m0, l0, a0)
+        for blk in range(nblk):
+            carry, _ = chunk(carry, (kb[:, blk], vb[:, blk], jnp.int32(blk)))
+        m, l, acc = carry
+    else:
+        kbs = jnp.moveaxis(kb, 1, 0)
+        vbs = jnp.moveaxis(vb, 1, 0)
+        (m, l, acc), _ = jax.lax.scan(chunk, (m0, l0, a0), (kbs, vbs, jnp.arange(nblk)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, dh).astype(v.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """One-token attention against a cache.
+
+    q: (B, 1, H, dh); k/v_cache: (B, Smax, KVH, dh); pos: () int32 current length.
+    """
+    B, _, H, dh = q.shape
+    Smax, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, dh).astype(jnp.float32) / (dh ** 0.5)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
+    valid = jnp.arange(Smax)[None, None, None, :] <= pos
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, dh).astype(v_cache.dtype)
+
+
+def attention_block(cfg: ModelConfig, p, x, *, positions, causal=True, prefix_len=0,
+                    block_kv=1024, full_thresh=2048, unroll=False):
+    """Pre-norm attention sublayer (no residual add)."""
+    h = apply_norm(cfg, p["ln"], x)
+    q, k, v = qkv(cfg, p, h, positions)
+    S = x.shape[1]
+    if S <= full_thresh or q.shape[1] != k.shape[1]:
+        # positions is a 1D (S,) vector everywhere (shared across batch)
+        o = full_attention(q, k, v, causal=causal, q_pos=positions, kv_pos=positions,
+                           prefix_len=prefix_len)
+    else:
+        o = blockwise_attention(q, k, v, causal=causal, block_kv=block_kv,
+                                prefix_len=prefix_len, unroll=unroll)
+    return o.reshape(x.shape[0], S, -1) @ p["wo"]

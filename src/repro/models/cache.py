@@ -1,0 +1,364 @@
+"""Prefill and single-token decode with caches, for every family.
+
+serve_step semantics (per the assignment): ``decode_*`` / ``long_*`` shapes
+lower ``decode_step`` — one new token against a cache of seq_len. Caches are
+stacked over layers so the layer loop can scan over (params, cache) jointly.
+
+Cache layouts (leading L = layers / blocks):
+  dense/moe/vlm : {"k","v": (L, B, Smax, KVH, dh), "pos": ()}
+  hybrid (jamba): {"k","v": (L, B, Smax, KVH, dh), "conv": (L, P-1, B, KC-1, DI),
+                   "ssm": (L, P-1, B, DI, N), "pos": ()}
+  ssm (rwkv6)   : {"shift_t","shift_c": (L, B, 1, D), "wkv": (L, B, H, dh, dh), "pos": ()}
+  audio         : {"k","v": (L, B, Smax, KVH, dh), "xk","xv": (L, B, Se, KVH, dh), "pos": ()}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv
+from repro.models.layers import apply_norm, dtype_of, mlp_apply, sinusoidal_positions
+from repro.models.model import _embed, _layer_slice, _logits, cast_params
+
+
+def kv_dtype(cfg):
+    return dtype_of(cfg.compute_dtype)
+
+
+def _q8(x):
+    """Quantize (B,S,KVH,dh) -> (int8, bf16 scale (B,S,KVH,1))."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _dq(q, scale):
+    return q.astype(jnp.bfloat16) * scale
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Abstract-friendly cache constructor (all jnp.zeros)."""
+    dt = kv_dtype(cfg)
+    KVH, dh = cfg.n_kv_heads, cfg.dh
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.kv_quant:  # int8 KV + per-(token, head) bf16 scales (~1.97x less bytes)
+            return {"k": jnp.zeros((cfg.n_layers, batch, max_seq, KVH, dh), jnp.int8),
+                    "v": jnp.zeros((cfg.n_layers, batch, max_seq, KVH, dh), jnp.int8),
+                    "k_scale": jnp.zeros((cfg.n_layers, batch, max_seq, KVH, 1), jnp.bfloat16),
+                    "v_scale": jnp.zeros((cfg.n_layers, batch, max_seq, KVH, 1), jnp.bfloat16),
+                    "pos": jnp.zeros((), jnp.int32)}
+        return {"k": jnp.zeros((cfg.n_layers, batch, max_seq, KVH, dh), dt),
+                "v": jnp.zeros((cfg.n_layers, batch, max_seq, KVH, dh), dt),
+                "pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        P = cfg.attn_period
+        nb = cfg.n_layers // P
+        return {"k": jnp.zeros((nb, batch, max_seq, KVH, dh), dt),
+                "v": jnp.zeros((nb, batch, max_seq, KVH, dh), dt),
+                "conv": jnp.zeros((nb, P - 1, batch, cfg.ssm_conv - 1, cfg.d_inner), jnp.float32),
+                "ssm": jnp.zeros((nb, P - 1, batch, cfg.d_inner, cfg.ssm_d_state), jnp.float32),
+                "pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        H = cfg.d_model // cfg.rwkv_head_dim
+        return {"shift_t": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), jnp.float32),
+                "shift_c": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), jnp.float32),
+                "wkv": jnp.zeros((cfg.n_layers, batch, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+                "pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "audio":
+        return {"k": jnp.zeros((cfg.n_layers, batch, max_seq, KVH, dh), dt),
+                "v": jnp.zeros((cfg.n_layers, batch, max_seq, KVH, dh), dt),
+                "xk": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, KVH, dh), dt),
+                "xv": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, KVH, dh), dt),
+                "pos": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.family)
+
+
+def _pad_seq(k, max_seq):
+    S = k.shape[1]
+    if S == max_seq:
+        return k
+    return jnp.pad(k, ((0, 0), (0, max_seq - S), (0, 0), (0, 0)))
+
+
+# =============================================================== prefill
+
+def prefill(cfg: ModelConfig, params, batch, *, max_seq: int | None = None,
+            unroll: bool = False, block_kv: int = 2048):
+    """Process the prompt; returns (last-token logits, cache)."""
+    params = cast_params(params, cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+
+    if cfg.family == "audio":
+        return _whisper_prefill(cfg, params, batch, max_seq or S, unroll)
+
+    prefix_len = 0
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(kv_dtype(cfg))
+        x = jnp.concatenate([patches, _embed(cfg, params, tokens)], axis=1)
+        prefix_len = patches.shape[1]
+    else:
+        x = _embed(cfg, params, tokens)
+    S_tot = x.shape[1]
+    max_seq = max_seq or S_tot
+    positions = jnp.arange(S_tot, dtype=jnp.int32)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(x, lp):
+            h = apply_norm(cfg, lp["attn"]["ln"], x)
+            q, k, v = attn.qkv(cfg, lp["attn"], h, positions)
+            if S_tot <= 2048:
+                o = attn.full_attention(q, k, v, causal=True, q_pos=positions,
+                                        kv_pos=positions, prefix_len=prefix_len)
+            else:
+                o = attn.blockwise_attention(q, k, v, causal=True, block_kv=block_kv,
+                                             prefix_len=prefix_len, unroll=unroll)
+            x = x + o.reshape(B, S_tot, -1) @ lp["attn"]["wo"]
+            if "moe" in lp:
+                d, _ = moe_mod.moe_ffn(cfg, lp["moe"], x)
+            else:
+                d = mlp_apply(cfg, lp["mlp"], x)
+            if cfg.kv_quant:
+                kq, ks = _q8(k)
+                vq, vs = _q8(v)
+                kv = {"k": _pad_seq(kq, max_seq), "v": _pad_seq(vq, max_seq),
+                      "k_scale": _pad_seq(ks, max_seq), "v_scale": _pad_seq(vs, max_seq)}
+            else:
+                kv = {"k": _pad_seq(k, max_seq), "v": _pad_seq(v, max_seq)}
+            return x + d, kv
+
+        x, kvs = _stack_apply(body, x, params["layers"], cfg.n_layers, unroll)
+        cache = {**kvs, "pos": jnp.asarray(S_tot, jnp.int32)}
+    elif cfg.family == "hybrid":
+        x, cache = _jamba_prefill(cfg, params, x, positions, max_seq, unroll, block_kv)
+    elif cfg.family == "ssm":
+        def body(x, lp):
+            t, st = rwkv.rwkv_time_mix(cfg, lp, x)
+            x = x + t
+            c, sc = rwkv.rwkv_channel_mix(cfg, lp, x)
+            return x + c, {"shift_t": st["shift_t"], "shift_c": sc["shift_c"], "wkv": st["wkv"]}
+        x, states = _stack_apply(body, x, params["layers"], cfg.n_layers, unroll)
+        cache = {**states, "pos": jnp.asarray(S_tot, jnp.int32)}
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(cfg, params["final_norm"], x[:, -1:])
+    return _logits(cfg, params, x), cache
+
+
+def _stack_apply(body, x, stacked, n, unroll):
+    """Like _scan_layers but collects per-layer outputs (stacked over L)."""
+    import os
+    if os.environ.get("REPRO_SEQ_SHARD", "0") == "1":
+        from repro import sharding as shd
+        inner = body
+        def body(x, lp):  # noqa: F811
+            x, o = inner(x, lp)
+            return shd.hint(x, "b", "m", None), o
+    if unroll:
+        outs = []
+        for i in range(n):
+            x, o = body(x, _layer_slice(stacked, i))
+            outs.append(o)
+        return x, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    def sbody(x, lp):
+        return body(x, lp)
+
+    return jax.lax.scan(sbody, x, stacked)
+
+
+def _jamba_prefill(cfg, params, x, positions, max_seq, unroll, block_kv):
+    P = cfg.attn_period
+    nb = cfg.n_layers // P
+    B, S, _ = x.shape
+    moe_idx = [i for i in range(P) if cfg.is_moe_layer(i)]
+
+    def block_body(x, bp):
+        mamba_states = []
+        kv = None
+        mamba_j = dense_j = moe_j = 0
+        for i in range(P):
+            if i == cfg.attn_offset % P:
+                h = apply_norm(cfg, bp["attn"]["ln"], x)
+                q, k, v = attn.qkv(cfg, bp["attn"], h, positions)
+                if S <= 2048:
+                    o = attn.full_attention(q, k, v, q_pos=positions, kv_pos=positions)
+                else:
+                    o = attn.blockwise_attention(q, k, v, block_kv=block_kv, unroll=unroll)
+                x = x + o.reshape(B, S, -1) @ bp["attn"]["wo"]
+                kv = {"k": _pad_seq(k, max_seq), "v": _pad_seq(v, max_seq)}
+            else:
+                m, st = mam.mamba_block(cfg, _layer_slice(bp["mamba"], mamba_j), x,
+                                        state=mam.mamba_init_state(cfg, B))
+                x = x + m
+                mamba_states.append(st)
+                mamba_j += 1
+            if i in moe_idx:
+                d, _ = moe_mod.moe_ffn(cfg, _layer_slice(bp["ffn_moe"], moe_j), x)
+                moe_j += 1
+            else:
+                d = mlp_apply(cfg, _layer_slice(bp["ffn_dense"], dense_j), x)
+                dense_j += 1
+            x = x + d
+        states = jax.tree.map(lambda *xs: jnp.stack(xs), *mamba_states)
+        return x, {"k": kv["k"], "v": kv["v"], "conv": states["conv"], "ssm": states["ssm"]}
+
+    x, c = _stack_apply(block_body, x, params["blocks"], nb, unroll)
+    return x, {**c, "pos": jnp.asarray(S, jnp.int32)}
+
+
+def _whisper_prefill(cfg, params, batch, max_seq, unroll):
+    from repro.models.model import _whisper_forward
+    cdt = kv_dtype(cfg)
+    enc = _whisper_forward(cfg, params, batch, unroll=unroll, remat=False, frames_out_only=True)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    Se = enc.shape[1]
+    x = _embed(cfg, params, tokens) + sinusoidal_positions(S, cfg.d_model).astype(cdt)[None]
+    pos_d = jnp.arange(S, dtype=jnp.int32)
+    pos_e = jnp.arange(Se, dtype=jnp.int32)
+
+    def body(x, lp):
+        h = apply_norm(cfg, lp["attn"]["ln"], x)
+        q, k, v = attn.qkv(cfg, lp["attn"], h, None)
+        o = attn.full_attention(q, k, v, causal=True, q_pos=pos_d, kv_pos=pos_d)
+        x = x + o.reshape(B, S, -1) @ lp["attn"]["wo"]
+        h = apply_norm(cfg, lp["xattn"]["ln"], x)
+        qx = (h @ lp["xattn"]["wq"]).reshape(B, S, cfg.n_heads, cfg.dh)
+        xk = (enc @ lp["xattn"]["wk"]).reshape(B, Se, cfg.n_kv_heads, cfg.dh)
+        xv = (enc @ lp["xattn"]["wv"]).reshape(B, Se, cfg.n_kv_heads, cfg.dh)
+        o = attn.full_attention(qx, xk, xv, causal=False, q_pos=pos_d, kv_pos=pos_e)
+        x = x + o.reshape(B, S, -1) @ lp["xattn"]["wo"]
+        x = x + mlp_apply(cfg, lp["mlp"], x)
+        return x, {"k": _pad_seq(k, max_seq), "v": _pad_seq(v, max_seq), "xk": xk, "xv": xv}
+
+    x, kvs = _stack_apply(body, x, params["layers"], cfg.n_layers, unroll)
+    x = apply_norm(cfg, params["final_norm"], x[:, -1:])
+    cache = {**kvs, "pos": jnp.asarray(S, jnp.int32)}
+    return _logits(cfg, params, x), cache
+
+
+# =============================================================== decode
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, *, unroll: bool = False):
+    """One token: tokens (B, 1) -> (logits (B, 1, V), new cache)."""
+    params = cast_params(params, cfg)
+    pos = cache["pos"]
+    B = tokens.shape[0]
+    positions = pos[None].astype(jnp.int32)  # (1,) rope position of the new token
+
+    x = _embed(cfg, params, tokens)
+    if cfg.family == "audio":
+        x = x + jax.lax.dynamic_slice_in_dim(
+            sinusoidal_positions(cache["k"].shape[2], cfg.d_model), pos, 1, 0
+        ).astype(x.dtype)[None]
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        def body(x, lpc):
+            lp, cl = lpc
+            h = apply_norm(cfg, lp["attn"]["ln"], x)
+            q, k, v = attn.qkv(cfg, lp["attn"], h, positions if cfg.rope else None)
+            if cfg.kv_quant:
+                kq, ks = _q8(k)
+                vq, vs = _q8(v)
+                kc = jax.lax.dynamic_update_slice(cl["k"], kq, (0, pos, 0, 0))
+                vc = jax.lax.dynamic_update_slice(cl["v"], vq, (0, pos, 0, 0))
+                ksc = jax.lax.dynamic_update_slice(cl["k_scale"], ks, (0, pos, 0, 0))
+                vsc = jax.lax.dynamic_update_slice(cl["v_scale"], vs, (0, pos, 0, 0))
+                o = attn.decode_attention(q, _dq(kc, ksc), _dq(vc, vsc), pos)
+                new_cl = {"k": kc, "v": vc, "k_scale": ksc, "v_scale": vsc}
+            else:
+                kc = jax.lax.dynamic_update_slice(cl["k"], k.astype(cl["k"].dtype), (0, pos, 0, 0))
+                vc = jax.lax.dynamic_update_slice(cl["v"], v.astype(cl["v"].dtype), (0, pos, 0, 0))
+                o = attn.decode_attention(q, kc, vc, pos)
+                new_cl = {"k": kc, "v": vc}
+            x = x + o.reshape(B, 1, -1) @ lp["attn"]["wo"]
+            if cfg.family == "audio":
+                qx = (apply_norm(cfg, lp["xattn"]["ln"], x) @ lp["xattn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.dh)
+                Se = cl["xk"].shape[1]
+                o = attn.decode_attention(qx, cl["xk"], cl["xv"], jnp.asarray(Se - 1, jnp.int32))
+                x = x + o.reshape(B, 1, -1) @ lp["xattn"]["wo"]
+                new_cl.update({"xk": cl["xk"], "xv": cl["xv"]})
+            if "moe" in lp:
+                d, _ = moe_mod.moe_ffn(cfg, lp["moe"], x)
+            else:
+                d = mlp_apply(cfg, lp["mlp"], x)
+            return x + d, new_cl
+
+        layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+        x, new_caches = _stack_apply_pair(body, x, params["layers"], layer_caches,
+                                          cfg.n_layers, unroll)
+    elif cfg.family == "hybrid":
+        x, new_caches = _jamba_decode(cfg, params, cache, x, positions, unroll)
+    elif cfg.family == "ssm":
+        def body(x, lpc):
+            lp, cl = lpc
+            t, st = rwkv.rwkv_time_mix(cfg, lp, x, state={"shift_t": cl["shift_t"], "wkv": cl["wkv"]})
+            x = x + t
+            c, sc = rwkv.rwkv_channel_mix(cfg, lp, x, state={"shift_c": cl["shift_c"]})
+            return x + c, {"shift_t": st["shift_t"], "wkv": st["wkv"], "shift_c": sc["shift_c"]}
+        layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+        x, new_caches = _stack_apply_pair(body, x, params["layers"], layer_caches,
+                                          cfg.n_layers, unroll)
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = _logits(cfg, params, x)
+    return logits, {**new_caches, "pos": pos + 1}
+
+
+def _stack_apply_pair(body, x, stacked_params, stacked_cache, n, unroll):
+    if unroll:
+        outs = []
+        for i in range(n):
+            x, o = body(x, (_layer_slice(stacked_params, i), _layer_slice(stacked_cache, i)))
+            outs.append(o)
+        return x, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return jax.lax.scan(lambda x, lpc: body(x, lpc), x, (stacked_params, stacked_cache))
+
+
+def _jamba_decode(cfg, params, cache, x, positions, unroll):
+    P = cfg.attn_period
+    nb = cfg.n_layers // P
+    B = x.shape[0]
+    pos = cache["pos"]
+    moe_idx = [i for i in range(P) if cfg.is_moe_layer(i)]
+
+    def block_body(x, bpc):
+        bp, cl = bpc
+        mamba_j = dense_j = moe_j = 0
+        new_states = []
+        new_kv = {}
+        for i in range(P):
+            if i == cfg.attn_offset % P:
+                h = apply_norm(cfg, bp["attn"]["ln"], x)
+                q, k, v = attn.qkv(cfg, bp["attn"], h, positions)
+                kc = jax.lax.dynamic_update_slice(cl["k"], k.astype(cl["k"].dtype), (0, pos, 0, 0))
+                vc = jax.lax.dynamic_update_slice(cl["v"], v.astype(cl["v"].dtype), (0, pos, 0, 0))
+                o = attn.decode_attention(q, kc, vc, pos)
+                x = x + o.reshape(B, 1, -1) @ bp["attn"]["wo"]
+                new_kv = {"k": kc, "v": vc}
+            else:
+                st = {"conv": cl["conv"][mamba_j], "ssm": cl["ssm"][mamba_j]}
+                m, nst = mam.mamba_block(cfg, _layer_slice(bp["mamba"], mamba_j), x, state=st)
+                x = x + m
+                new_states.append(nst)
+                mamba_j += 1
+            if i in moe_idx:
+                d, _ = moe_mod.moe_ffn(cfg, _layer_slice(bp["ffn_moe"], moe_j), x)
+                moe_j += 1
+            else:
+                d = mlp_apply(cfg, _layer_slice(bp["ffn_dense"], dense_j), x)
+                dense_j += 1
+            x = x + d
+        st = jax.tree.map(lambda *xs: jnp.stack(xs), *new_states)
+        return x, {**new_kv, "conv": st["conv"], "ssm": st["ssm"]}
+
+    block_caches = {k: v for k, v in cache.items() if k != "pos"}
+    return _stack_apply_pair(block_body, x, params["blocks"], block_caches, nb, unroll)

@@ -1,0 +1,121 @@
+"""Shared model building blocks: norms, rotary embeddings, MLPs, init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------- init utils
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / (d_in ** 0.5)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def stacked(keys, fn):
+    """Stack per-layer params along a leading layer axis."""
+    return jax.vmap(fn)(keys)
+
+
+# ---------------------------------------------------------------- norms
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_params(cfg: ModelConfig, dtype):
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.ones((cfg.d_model,), dtype), "bias": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+# ---------------------------------------------------------------- rotary
+
+def rope_freqs(dh: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (dh/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (..., S, 1, dh/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d_model: int):
+    """Whisper-style absolute sinusoidal embeddings."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * i / d_model))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------- MLP
+
+def mlp_params(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"ln": norm_params(cfg, dtype)}
+    if cfg.act in ("swiglu", "gelu_glu"):
+        p["wi"] = dense_init(ks[0], cfg.d_model, cfg.d_ff, dtype)
+        p["wg"] = dense_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    else:  # plain gelu (whisper)
+        p["wi"] = dense_init(ks[0], cfg.d_model, cfg.d_ff, dtype)
+        p["bi"] = jnp.zeros((cfg.d_ff,), dtype)
+        p["bo"] = jnp.zeros((cfg.d_model,), dtype)
+    p["wo"] = dense_init(ks[2], cfg.d_ff, cfg.d_model, dtype, scale=1.0 / max(cfg.n_layers, 1) ** 0.5)
+    return p
+
+
+def mlp_apply(cfg: ModelConfig, p, x):
+    """Pre-norm MLP sublayer (no residual add)."""
+    x = apply_norm(cfg, p["ln"], x)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    elif cfg.act == "gelu_glu":
+        h = jax.nn.gelu(x @ p["wg"]) * (x @ p["wi"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"] + p["bi"].astype(x.dtype))
+    out = h @ p["wo"]
+    if "bo" in p:
+        out = out + p["bo"].astype(x.dtype)
+    return out
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean next-token CE in fp32. logits (..., V), labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,113 @@
+"""Mamba (S6 selective SSM) block for the Jamba hybrid architecture.
+
+Training/prefill uses a ``lax.scan`` over the sequence carrying the SSM state
+(B, d_inner, d_state): state FLOPs are <1% of the block's matmul FLOPs at
+Jamba scale, so the sequential scan is the memory-optimal pure-JAX form (the
+TPU production path would fuse this scan into a Pallas kernel; cf.
+kernels/wkv6.py for the equivalent pattern on the RWKV side). Decode carries
+(conv window, ssm state) and costs O(1) per token — this is what makes
+``long_500k`` runnable for Jamba.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, norm_params
+
+
+def mamba_params(key, cfg: ModelConfig, dtype):
+    D, DI, N, R, KC = cfg.d_model, cfg.d_inner, cfg.ssm_d_state, cfg.dt_rank, cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    a = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (DI, 1))
+    return {
+        "ln": norm_params(cfg, dtype),
+        "win": dense_init(ks[0], D, 2 * DI, dtype),
+        "wconv": (jax.random.normal(ks[1], (KC, DI), jnp.float32) / KC ** 0.5).astype(dtype),
+        "bconv": jnp.zeros((DI,), dtype),
+        "wxdt": dense_init(ks[2], DI, R, dtype),
+        "wxb": dense_init(ks[3], DI, N, dtype),
+        "wxc": dense_init(ks[4], DI, N, dtype),
+        "wdt": dense_init(ks[5], R, DI, dtype),
+        "bdt": jnp.full((DI,), -4.6, dtype),  # softplus^-1(0.01)
+        "alog": jnp.log(a),  # (DI, N) fp32
+        "dskip": jnp.ones((DI,), jnp.float32),
+        "wout": dense_init(ks[6], DI, D, dtype, scale=1.0 / max(cfg.n_layers, 1) ** 0.5),
+    }
+
+
+def _conv_causal(x, w, b, window=None):
+    """Depthwise causal conv via explicit shifts. x: (B, S, DI), w: (KC, DI)."""
+    KC = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(KC):
+        shift = KC - 1 - i
+        xi = x if shift == 0 else jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _ssm_scan(u, dt, Bm, Cm, A, init_state=None):
+    """Selective scan. u,dt: (B,S,DI); Bm,Cm: (B,S,N); A: (DI,N) (negative).
+
+    Returns y (B,S,DI) and final state (B,DI,N).
+    """
+    Bsz, S, DI = u.shape
+    N = Bm.shape[-1]
+    h0 = jnp.zeros((Bsz, DI, N), jnp.float32) if init_state is None else init_state
+
+    def step(h, inp):
+        ut, dtt, bt, ct = inp  # (B,DI),(B,DI),(B,N),(B,N)
+        dA = jnp.exp(dtt[..., None] * A[None])  # (B,DI,N)
+        dBu = (dtt * ut)[..., None] * bt[:, None, :]  # (B,DI,N)
+        h = h * dA + dBu
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    from repro.models.scan_utils import chunked_scan
+    xs = (jnp.moveaxis(u, 1, 0).astype(jnp.float32), jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bm, 1, 0).astype(jnp.float32), jnp.moveaxis(Cm, 1, 0).astype(jnp.float32))
+    h, ys = chunked_scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def mamba_block(cfg: ModelConfig, p, x, state=None):
+    """x: (B, S, D). state: None (train/prefill) or dict for decode carry-in.
+
+    Returns (out, new_state) where new_state has {"conv": (B,KC-1,DI), "ssm": (B,DI,N)}.
+    """
+    from repro.models.layers import apply_norm
+
+    B, S, D = x.shape
+    DI, N, KC = cfg.d_inner, cfg.ssm_d_state, cfg.ssm_conv
+    h = apply_norm(cfg, p["ln"], x)
+    xz = h @ p["win"]
+    xs, z = jnp.split(xz, 2, axis=-1)  # (B,S,DI) each
+
+    if state is not None:  # prepend conv window from carry
+        xs_ext = jnp.concatenate([state["conv"].astype(xs.dtype), xs], axis=1)
+        xc = _conv_causal(xs_ext, p["wconv"], p["bconv"])[:, KC - 1:]
+        new_conv = xs_ext[:, -(KC - 1):].astype(jnp.float32) if KC > 1 else state["conv"]
+    else:
+        xc = _conv_causal(xs, p["wconv"], p["bconv"])
+        new_conv = xs[:, -(KC - 1):].astype(jnp.float32) if KC > 1 else None
+    xc = jax.nn.silu(xc)
+
+    dt = jax.nn.softplus((xc @ p["wxdt"]) @ p["wdt"] + p["bdt"].astype(xc.dtype))
+    Bm = xc @ p["wxb"]
+    Cm = xc @ p["wxc"]
+    A = -jnp.exp(p["alog"])  # (DI, N)
+    init = state["ssm"] if state is not None else None
+    y, hN = _ssm_scan(xc, dt, Bm, Cm, A, init)
+    y = (y + xc.astype(jnp.float32) * p["dskip"][None, None]).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ p["wout"]
+    new_state = {"conv": new_conv, "ssm": hN} if new_conv is not None or state is not None else None
+    return out, new_state
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int):
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), jnp.float32),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_d_state), jnp.float32),
+    }

@@ -1,0 +1,299 @@
+"""Model wiring: init / forward / prefill / decode for every assigned family.
+
+Families:
+  dense | moe | vlm : uniform decoder layers (attention + MLP-or-MoE)
+  hybrid (jamba)    : period-8 blocks (7 Mamba + 1 attention; MoE every 2nd)
+  ssm (rwkv6)       : time-mix + channel-mix layers
+  audio (whisper)   : encoder-decoder with cross-attention
+
+Layer stacks are scanned (compact HLO) by default; ``unroll=True`` switches to
+python loops so the dry-run's HLO cost analysis counts every layer (lax.scan
+bodies are counted once by XLA cost analysis — measured, see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv
+from repro.models.layers import (apply_norm, cross_entropy, dtype_of, mlp_apply,
+                                 mlp_params, norm_params, sinusoidal_positions)
+
+# Param leaves kept in fp32 regardless of compute dtype (routing / SSM dynamics
+# / norm statistics are precision-sensitive).
+_FP32_KEEP = {"wr", "alog", "u", "w0", "gn_scale", "dskip", "scale", "bias"}
+
+
+def cast_params(params, cfg: ModelConfig):
+    cdt = dtype_of(cfg.compute_dtype)
+
+    def cast(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in _FP32_KEEP or leaf.dtype not in (jnp.float32, jnp.bfloat16):
+            return leaf
+        return leaf.astype(cdt)
+
+    return jax.tree_util.tree_map_with_path(cast, params)
+
+
+# =============================================================== init
+
+def _stack_init(key, n: int, fn):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(key, cfg: ModelConfig):
+    pdt = dtype_of(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    V, D = cfg.vocab_size, cfg.d_model
+    params: dict[str, Any] = {
+        "embed": {"tok": (jax.random.normal(keys[0], (V, D), jnp.float32) * 0.02).astype(pdt)},
+        "final_norm": norm_params(cfg, pdt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"wlm": (jax.random.normal(keys[1], (D, V), jnp.float32) / D ** 0.5).astype(pdt)}
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def one(k):
+            ka, kf = jax.random.split(k)
+            p = {"attn": attn.attn_params(ka, cfg, pdt)}
+            if cfg.n_experts and cfg.is_moe_layer(0):
+                # uniform-MoE archs (kimi, moonshot): every layer MoE
+                p["moe"] = moe_mod.moe_params(kf, cfg, pdt)
+            else:
+                p["mlp"] = mlp_params(kf, cfg, pdt)
+            return p
+        params["layers"] = _stack_init(keys[2], cfg.n_layers, one)
+    elif cfg.family == "hybrid":
+        P = cfg.attn_period
+        n_blocks = cfg.n_layers // P
+        n_moe = sum(cfg.is_moe_layer(i) for i in range(P))
+        n_dense = P - n_moe
+
+        def one_block(k):
+            ka, km, kd, ke = jax.random.split(k, 4)
+            return {
+                "attn": attn.attn_params(ka, cfg, pdt),
+                "mamba": _stack_init(km, P - 1, lambda kk: mam.mamba_params(kk, cfg, pdt)),
+                "ffn_dense": _stack_init(kd, n_dense, lambda kk: mlp_params(kk, cfg, pdt)),
+                "ffn_moe": _stack_init(ke, n_moe, lambda kk: moe_mod.moe_params(kk, cfg, pdt)),
+            }
+        params["blocks"] = _stack_init(keys[2], n_blocks, one_block)
+    elif cfg.family == "ssm":
+        params["layers"] = _stack_init(keys[2], cfg.n_layers, lambda k: rwkv.rwkv_params(k, cfg, pdt))
+    elif cfg.family == "audio":
+        enc_cfg = cfg
+        def enc_one(k):
+            ka, kf = jax.random.split(k)
+            return {"attn": attn.attn_params(ka, enc_cfg, pdt), "mlp": mlp_params(kf, enc_cfg, pdt)}
+        def dec_one(k):
+            ka, kx, kf = jax.random.split(k, 3)
+            return {"attn": attn.attn_params(ka, cfg, pdt),
+                    "xattn": attn.attn_params(kx, cfg, pdt),
+                    "mlp": mlp_params(kf, cfg, pdt)}
+        params["enc_layers"] = _stack_init(keys[2], cfg.n_enc_layers, enc_one)
+        params["enc_norm"] = norm_params(cfg, pdt)
+        params["layers"] = _stack_init(keys[3], cfg.n_layers, dec_one)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# =============================================================== helpers
+
+def _embed(cfg, params, tokens):
+    from repro import sharding as shd
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0).astype(dtype_of(cfg.compute_dtype))
+    if cfg.family == "vlm":  # gemma scales embeddings
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return shd.hint(x, "b", None, None)
+
+
+def _logits(cfg, params, x):
+    from repro import sharding as shd
+    if cfg.tie_embeddings:
+        w = params["embed"]["tok"].astype(x.dtype)
+        out = x @ w.T
+    else:
+        out = x @ params["lm_head"]["wlm"].astype(x.dtype)
+    return shd.hint(out, "b", None, "m")  # vocab-sharded logits keep CE sharded
+
+
+def _layer_slice(stacked, i: int):
+    return jax.tree.map(lambda a: a[i], stacked)
+
+
+def _scan_layers(body, x, stacked, n: int, unroll: bool, remat: bool):
+    """body(x, layer_params) -> (x, aux). Returns (x, aux_sum)."""
+    import os
+    if os.environ.get("REPRO_SEQ_SHARD", "0") == "1":
+        # sequence parallelism between layers: keep the residual stream
+        # sharded (batch, seq->model) so TP all-reduces become
+        # reduce-scatter/all-gather pairs placed by GSPMD (§Perf knob)
+        from repro import sharding as shd
+        inner = body
+        def body(x, lp):  # noqa: F811
+            x, a = inner(x, lp)
+            return shd.hint(x, "b", "m", None), a
+    if remat:
+        body = jax.checkpoint(body)
+    if unroll:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(n):
+            x, a = body(x, _layer_slice(stacked, i))
+            aux = aux + a
+        return x, aux
+
+    def sbody(carry, lp):
+        x, aux = carry
+        x, a = body(x, lp)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(sbody, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux
+
+
+# =============================================================== forward (train)
+
+def forward(cfg: ModelConfig, params, batch, *, unroll: bool = False,
+            block_kv: int = 2048, remat: bool | None = None):
+    """Returns (logits, aux_loss). batch keys: tokens, and frames/patches for
+    audio/vlm. tokens includes inputs only (labels handled by the caller)."""
+    params = cast_params(params, cfg)
+    remat = (cfg.remat == "full") if remat is None else remat
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+
+    if cfg.family == "audio":
+        return _whisper_forward(cfg, params, batch, unroll=unroll, remat=remat), jnp.zeros((), jnp.float32)
+
+    prefix_len = 0
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(dtype_of(cfg.compute_dtype))
+        x_txt = _embed(cfg, params, tokens)
+        x = jnp.concatenate([patches, x_txt], axis=1)
+        prefix_len = patches.shape[1]
+        S = x.shape[1]
+    else:
+        x = _embed(cfg, params, tokens)
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(x, lp):
+            x = x + attn.attention_block(cfg, lp["attn"], x, positions=positions,
+                                         prefix_len=prefix_len, block_kv=block_kv, unroll=unroll)
+            if "moe" in lp:
+                d, aux = moe_mod.moe_ffn(cfg, lp["moe"], x)
+            else:
+                d, aux = mlp_apply(cfg, lp["mlp"], x), jnp.zeros((), jnp.float32)
+            return x + d, aux
+        x, aux = _scan_layers(body, x, params["layers"], cfg.n_layers, unroll, remat)
+    elif cfg.family == "hybrid":
+        x, aux = _jamba_stack(cfg, params, x, positions, unroll=unroll, remat=remat, block_kv=block_kv)
+    elif cfg.family == "ssm":
+        def body(x, lp):
+            t, _ = rwkv.rwkv_time_mix(cfg, lp, x)
+            x = x + t
+            c, _ = rwkv.rwkv_channel_mix(cfg, lp, x)
+            return x + c, jnp.zeros((), jnp.float32)
+        x, aux = _scan_layers(body, x, params["layers"], cfg.n_layers, unroll, remat)
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    return _logits(cfg, params, x), aux
+
+
+def _jamba_stack(cfg, params, x, positions, *, unroll, remat, block_kv, caches=None):
+    """Jamba block stack. If caches is None: train/prefill over full sequence."""
+    P = cfg.attn_period
+    n_blocks = cfg.n_layers // P
+    moe_idx = [i for i in range(P) if cfg.is_moe_layer(i)]
+
+    def block_body(x, bp):
+        aux = jnp.zeros((), jnp.float32)
+        mamba_j = 0
+        dense_j = 0
+        moe_j = 0
+        for i in range(P):
+            if i == cfg.attn_offset % P:
+                x = x + attn.attention_block(cfg, bp["attn"], x, positions=positions,
+                                             block_kv=block_kv, unroll=unroll)
+            else:
+                m, _ = mam.mamba_block(cfg, _layer_slice(bp["mamba"], mamba_j), x)
+                x = x + m
+                mamba_j += 1
+            if i in moe_idx:
+                d, a = moe_mod.moe_ffn(cfg, _layer_slice(bp["ffn_moe"], moe_j), x)
+                aux = aux + a
+                moe_j += 1
+            else:
+                d = mlp_apply(cfg, _layer_slice(bp["ffn_dense"], dense_j), x)
+                dense_j += 1
+            x = x + d
+        return x, aux
+
+    return _scan_layers(block_body, x, params["blocks"], n_blocks, unroll, remat)
+
+
+def _whisper_forward(cfg, params, batch, *, unroll, remat, frames_out_only=False):
+    cdt = dtype_of(cfg.compute_dtype)
+    frames = batch["frames"].astype(cdt)  # (B, enc_seq, D) stub frontend output
+    Se = frames.shape[1]
+    frames = frames + sinusoidal_positions(Se, cfg.d_model).astype(cdt)[None]
+    pos_e = jnp.arange(Se, dtype=jnp.int32)
+
+    def enc_body(x, lp):
+        h = apply_norm(cfg, lp["attn"]["ln"], x)
+        q, k, v = attn.qkv(cfg, lp["attn"], h, None)
+        o = attn.full_attention(q, k, v, causal=False, q_pos=pos_e, kv_pos=pos_e)
+        x = x + o.reshape(x.shape[0], Se, -1) @ lp["attn"]["wo"]
+        return x + mlp_apply(cfg, lp["mlp"], x), jnp.zeros((), jnp.float32)
+
+    enc, _ = _scan_layers(enc_body, frames, params["enc_layers"], cfg.n_enc_layers, unroll, remat)
+    enc = apply_norm(cfg, params["enc_norm"], enc)
+    if frames_out_only:
+        return enc
+
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed(cfg, params, tokens)
+    x = x + sinusoidal_positions(S, cfg.d_model).astype(cdt)[None]
+    pos_d = jnp.arange(S, dtype=jnp.int32)
+
+    def dec_body(x, lp):
+        x = x + attn.attention_block(cfg, lp["attn"], x, positions=pos_d, unroll=unroll)
+        # cross attention
+        h = apply_norm(cfg, lp["xattn"]["ln"], x)
+        q = (h @ lp["xattn"]["wq"]).reshape(B, S, cfg.n_heads, cfg.dh)
+        k = (enc @ lp["xattn"]["wk"]).reshape(B, Se, cfg.n_kv_heads, cfg.dh)
+        v = (enc @ lp["xattn"]["wv"]).reshape(B, Se, cfg.n_kv_heads, cfg.dh)
+        o = attn.full_attention(q, k, v, causal=False, q_pos=pos_d, kv_pos=pos_e)
+        x = x + o.reshape(B, S, -1) @ lp["xattn"]["wo"]
+        return x + mlp_apply(cfg, lp["mlp"], x), jnp.zeros((), jnp.float32)
+
+    x, _ = _scan_layers(dec_body, x, params["layers"], cfg.n_layers, unroll, remat)
+    x = apply_norm(cfg, params["final_norm"], x)
+    return _logits(cfg, params, x)
+
+
+# =============================================================== loss
+
+def loss_fn(cfg: ModelConfig, params, batch, *, unroll: bool = False, aux_weight: float = 0.01):
+    """batch["tokens"]: (B, S+1); loss = CE(next token) + aux."""
+    tokens = batch["tokens"]
+    inputs = dict(batch)
+    inputs["tokens"] = tokens[:, :-1]
+    logits, aux = forward(cfg, params, inputs, unroll=unroll)
+    labels = tokens[:, 1:]
+    if cfg.family == "vlm":  # loss only over text positions (after the prefix)
+        logits = logits[:, cfg.n_vision_tokens:]
+    ce = cross_entropy(logits, labels)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}

@@ -1,0 +1,120 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+The WKV6 recurrence per head (state S: (dk, dv)):
+    S_t = diag(w_t) @ S_{t-1} + k_t^T v_t
+    y_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(wlog_t)) data-dependent per channel (LoRA on the shifted
+input). Training/prefill uses a sequence scan here (the pure-jnp oracle); the
+TPU production path is the chunked Pallas kernel in kernels/wkv6.py, which is
+validated against this scan in tests/test_kernels.py. Decode is O(1)/token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_norm, dense_init, norm_params
+
+
+def rwkv_params(key, cfg: ModelConfig, dtype):
+    D, HD = cfg.d_model, cfg.rwkv_head_dim
+    H = D // HD
+    R = cfg.rwkv_decay_lora
+    ks = jax.random.split(key, 12)
+    out_scale = 1.0 / max(cfg.n_layers, 1) ** 0.5
+    return {
+        "ln_t": norm_params(cfg, dtype),
+        "ln_c": norm_params(cfg, dtype),
+        # token-shift interpolation coefficients (per channel) for r,k,v,w,g
+        "mu": (jax.random.uniform(ks[0], (5, D), jnp.float32)).astype(dtype),
+        "wr": dense_init(ks[1], D, D, dtype),
+        "wk": dense_init(ks[2], D, D, dtype),
+        "wv": dense_init(ks[3], D, D, dtype),
+        "wg": dense_init(ks[4], D, D, dtype),
+        "wo": dense_init(ks[5], D, D, dtype, scale=out_scale),
+        # data-dependent decay LoRA: wlog = w0 + tanh(x @ wa) @ wb
+        "w0": jnp.full((D,), -0.6, jnp.float32),
+        "wa": dense_init(ks[6], D, R, dtype),
+        "wb": dense_init(ks[7], R, D, dtype, scale=0.1),
+        "u": (jax.random.normal(ks[8], (D,), jnp.float32) * 0.1),  # bonus, fp32
+        "gn_scale": jnp.ones((D,), jnp.float32),  # per-head groupnorm on y
+        # channel mix
+        "mu_ck": (jax.random.uniform(ks[9], (D,), jnp.float32)).astype(dtype),
+        "wck": dense_init(ks[10], D, cfg.d_ff, dtype),
+        "wcv": dense_init(ks[11], cfg.d_ff, D, dtype, scale=out_scale),
+    }
+
+
+def _token_shift(x, x_prev):
+    """x: (B,S,D); x_prev: (B,1,D) last token of previous segment (or zeros)."""
+    return jnp.concatenate([x_prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def wkv6_scan(r, k, v, wlog, u, init_state=None):
+    """Sequence-scan WKV6 (reference form).
+
+    r,k,v: (B,S,H,dh); wlog: (B,S,H,dh) log-decay (pre -exp(.)); u: (H,dh).
+    Returns y (B,S,H,dh), final state (B,H,dh,dh).
+    """
+    B, S, H, dh = r.shape
+    s0 = jnp.zeros((B, H, dh, dh), jnp.float32) if init_state is None else init_state
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,dh) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,dh,dh)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = jnp.exp(-jnp.exp(wt))[..., None] * s + kv
+        return s, y
+
+    from repro.models.scan_utils import chunked_scan
+    xs = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32) for t in (r, k, v, wlog))
+    s, ys = chunked_scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s
+
+
+def rwkv_time_mix(cfg: ModelConfig, p, x, state=None):
+    """state: None or {"shift_t": (B,1,D), "wkv": (B,H,dh,dh)}."""
+    B, S, D = x.shape
+    HD = cfg.rwkv_head_dim
+    H = D // HD
+    h = apply_norm(cfg, p["ln_t"], x)
+    xp = _token_shift(h, state["shift_t"] if state is not None else jnp.zeros((B, 1, D), h.dtype))
+    mu = p["mu"].astype(h.dtype)
+    xr, xk, xv, xw, xg = (h + mu[i][None, None] * (xp - h) for i in range(5))
+    r = (xr @ p["wr"]).reshape(B, S, H, HD)
+    k = (xk @ p["wk"]).reshape(B, S, H, HD)
+    v = (xv @ p["wv"]).reshape(B, S, H, HD)
+    g = jax.nn.silu(xg @ p["wg"])
+    wlog = (p["w0"].astype(jnp.float32) + (jnp.tanh(xw @ p["wa"]) @ p["wb"]).astype(jnp.float32))
+    wlog = wlog.reshape(B, S, H, HD)
+    u = p["u"].reshape(H, HD)
+    y, s = wkv6_scan(r, k, v, wlog, u, state["wkv"] if state is not None else None)
+    # per-head group norm
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = (y.reshape(B, S, D) * p["gn_scale"][None, None]).astype(x.dtype)
+    out = (y * g) @ p["wo"]
+    new_state = {"shift_t": h[:, -1:].astype(jnp.float32), "wkv": s}
+    return out, new_state
+
+
+def rwkv_channel_mix(cfg: ModelConfig, p, x, state=None):
+    B, S, D = x.shape
+    h = apply_norm(cfg, p["ln_c"], x)
+    xp = _token_shift(h, state["shift_c"] if state is not None else jnp.zeros((B, 1, D), h.dtype))
+    mu = p["mu_ck"].astype(h.dtype)
+    xk = h + mu[None, None] * (xp - h)
+    kk = jnp.square(jax.nn.relu(xk @ p["wck"]))
+    out = kk @ p["wcv"]
+    return out, {"shift_c": h[:, -1:].astype(jnp.float32)}
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int):
+    H = cfg.d_model // cfg.rwkv_head_dim
+    return {
+        "shift_t": jnp.zeros((batch, 1, cfg.d_model), jnp.float32),
+        "shift_c": jnp.zeros((batch, 1, cfg.d_model), jnp.float32),
+        "wkv": jnp.zeros((batch, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+    }

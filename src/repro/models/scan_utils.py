@@ -1,0 +1,36 @@
+"""Chunked sequence scan with remat at chunk boundaries.
+
+A naive ``lax.scan`` over S timesteps saves per-step residuals for the
+backward pass — for SSM/RWKV state recurrences that is S x state_size bytes
+(terabytes at Jamba scale). Scanning over chunks with a rematerialised inner
+scan keeps only chunk-boundary carries and recomputes inside each chunk:
+memory ~ (S/chunk) x carry + chunk x step_inputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_scan(step, init, xs, *, chunk: int = 128):
+    """Equivalent to ``lax.scan(step, init, xs)`` but remat-chunked.
+
+    xs: pytree with leading time dim S (must be divisible by chunk when
+    S > chunk; otherwise a plain scan is used). Returns (final_carry, ys).
+    """
+    S = jax.tree.leaves(xs)[0].shape[0]
+    if S <= chunk or S % chunk != 0:
+        return jax.lax.scan(step, init, xs)
+    n = S // chunk
+
+    xs_c = jax.tree.map(lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def chunk_body(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    carry, ys_c = jax.lax.scan(chunk_body, init, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape((S,) + a.shape[2:]), ys_c)
+    return carry, ys

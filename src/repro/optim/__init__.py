@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (Optimizer, adamw, adafactor, sgd_momentum,
+                                    clip_by_global_norm, global_norm)
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine

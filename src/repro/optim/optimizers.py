@@ -1,0 +1,146 @@
+"""Optimizers built on raw pytrees (no external deps).
+
+``Optimizer`` is a pair of pure functions (init, update) like optax, but the
+update signature carries the learning rate explicitly so schedules stay
+outside the optimizer state (simpler sharding / checkpointing).
+
+Adafactor (factored second moment, optional momentum-free operation) exists
+because the biggest assigned archs (kimi-k2 ~1.03T params, jamba ~398B) cannot
+hold AdamW fp32 state in one 256-chip v5e pod (see DESIGN.md section 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]  # (grads, state, params, lr) -> (new_params, new_state)
+    name: str
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), gn
+
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "count": c}
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(eps=1e-30, clip_threshold=1.0, decay=0.8, weight_decay=0.0,
+              momentum: bool = False) -> Optimizer:
+    """Factored second moment: for a (..., R, C) tensor keep row/col means.
+
+    State per leaf: {"vr": shape[:-1], "vc": shape[:-2]+(C,)} for ndim>=2,
+    else {"v": shape}. Optional bf16 first moment when momentum=True.
+    """
+    def init(params):
+        def one(p):
+            st = {}
+            if p.ndim >= 2:
+                st["vr"] = jnp.zeros(p.shape[:-1], jnp.float32)
+                st["vc"] = jnp.zeros(p.shape[:-2] + (p.shape[-1],), jnp.float32)
+            else:
+                st["v"] = jnp.zeros(p.shape, jnp.float32)
+            if momentum:
+                st["m"] = jnp.zeros(p.shape, jnp.bfloat16)
+            return st
+        return {"f": jax.tree.map(one, params), "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        rho = 1.0 - c.astype(jnp.float32) ** (-decay)
+
+        def one(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            new_st = dict(st)
+            if p.ndim >= 2:
+                vr = rho * st["vr"] + (1 - rho) * g2.mean(axis=-1)
+                vc = rho * st["vc"] + (1 - rho) * g2.mean(axis=-2)
+                new_st["vr"], new_st["vc"] = vr, vc
+                denom = (vr[..., None] * vc[..., None, :]) / jnp.maximum(
+                    vr.mean(axis=-1, keepdims=True)[..., None], eps)
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+            else:
+                v = rho * st["v"] + (1 - rho) * g2
+                new_st["v"] = v
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if momentum:
+                m = 0.9 * st["m"].astype(jnp.float32) + u
+                new_st["m"] = m.astype(jnp.bfloat16)
+                u = m
+            if weight_decay and p.ndim >= 2:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_st
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["f"])
+        outs = [one(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = treedef.unflatten([o[0] for o in outs])
+        new_f = treedef.unflatten([o[1] for o in outs])
+        return new_params, {"f": new_f, "count": c}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def sgd_momentum(beta=0.9) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            m = beta * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+        out = jax.tree.map(upd, grads, state["m"], params)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "count": state["count"] + 1}
+
+    return Optimizer(init, update, "sgd_momentum")
+
+
+def get_optimizer(name: str) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "sgd_momentum": sgd_momentum}[name]()

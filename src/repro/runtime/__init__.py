@@ -1,0 +1,3 @@
+from repro.runtime.straggler import CanaryProber, ClusterSim
+from repro.runtime.compression import compress_grads, decompress_grads, init_compression_state
+from repro.runtime.elastic import plan_elastic_mesh

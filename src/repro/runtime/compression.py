@@ -1,0 +1,43 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Used on the `pod` axis where ICI bandwidth is the scarce resource: gradients
+are quantized to int8 with a per-tensor scale before the cross-pod
+all-reduce; the quantization residual is carried into the next step (error
+feedback), which keeps SGD/Adam convergence unbiased to first order.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_compression_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+
+def compress_grads(grads, err_state):
+    """-> (int8 tree, scales tree, new err_state)."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        new_e = g - q.astype(jnp.float32) * scale
+        return q, scale, new_e
+
+    out = jax.tree.map(one, grads, err_state)
+    is_leaf = lambda x: isinstance(x, tuple)
+    q = jax.tree.map(lambda o: o[0], out, is_leaf=is_leaf)
+    s = jax.tree.map(lambda o: o[1], out, is_leaf=is_leaf)
+    e = jax.tree.map(lambda o: o[2], out, is_leaf=is_leaf)
+    return q, s, e
+
+
+def decompress_grads(q, scales):
+    return jax.tree.map(lambda qq, s: qq.astype(jnp.float32) * s, q, scales)
+
+
+def compression_ratio(grads) -> float:
+    """fp32 -> int8 + scale: ~4x less traffic on the compressed axis."""
+    tot = sum(g.size * 4 for g in jax.tree.leaves(grads))
+    comp = sum(g.size * 1 + 4 for g in jax.tree.leaves(grads))
+    return tot / comp

@@ -1,0 +1,28 @@
+"""Elastic re-meshing: keep training when pods/hosts fail.
+
+Given the surviving device count, pick the largest valid (data, model) mesh
+that preserves the model-parallel degree (weights keep their TP layout) and
+shrinks the data axis; the checkpoint manager then re-shards state onto it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def plan_elastic_mesh(n_devices: int, *, model_parallel: int = 16,
+                      prefer_pods: bool = True):
+    """Returns (shape, axis_names) for the largest usable mesh."""
+    if n_devices < model_parallel:
+        raise ValueError(f"need >= {model_parallel} devices for TP={model_parallel}")
+    usable = (n_devices // model_parallel) * model_parallel
+    data = usable // model_parallel
+    # factor a pod axis back out when the data axis is big enough
+    if prefer_pods and data % 16 == 0 and data > 16:
+        return (data // 16, 16, model_parallel), ("pod", "data", "model")
+    return (data, model_parallel), ("data", "model")
+
+
+def make_elastic_mesh(n_devices: int, *, model_parallel: int = 16):
+    shape, names = plan_elastic_mesh(n_devices, model_parallel=model_parallel)
+    return jax.make_mesh(shape, names,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(names))

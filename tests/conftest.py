@@ -1,0 +1,8 @@
+import os
+import sys
+from pathlib import Path
+
+# Make `src/` importable without install; keep the real single-device CPU view
+# (the 512-device flag belongs to launch/dryrun.py ONLY).
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,75 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret mode)."""
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.rc_transient import rc_transient as rc_pallas
+from repro.kernels.secded import encode_checks, syndrome
+from repro.kernels.shuffle import apply_shuffle
+from repro.kernels.wkv6 import wkv6 as wkv6_pallas
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("n", [1, 7, 512, 1000, 2049])
+def test_secded_encode_shapes(n):
+    data = RNG.integers(0, 2, (n, 64)).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(encode_checks(data)),
+                                  np.asarray(ref.secded_encode(data)))
+
+
+@pytest.mark.parametrize("n", [3, 256, 777])
+def test_secded_syndrome_shapes(n):
+    code = RNG.integers(0, 2, (n, 72)).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(syndrome(code)),
+                                  np.asarray(ref.secded_syndrome(code)))
+
+
+@pytest.mark.parametrize("n", [1, 65, 300])
+@pytest.mark.parametrize("inverse", [False, True])
+def test_shuffle_kernel(n, inverse):
+    b = RNG.integers(0, 2, (n, 576)).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(apply_shuffle(b, inverse=inverse)),
+                                  np.asarray(ref.diva_shuffle(b, inverse)))
+
+
+def test_shuffle_roundtrip():
+    b = RNG.integers(0, 2, (50, 576)).astype(np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(apply_shuffle(apply_shuffle(b), inverse=True)), b)
+
+
+@pytest.mark.parametrize("n", [4, 130])
+def test_rc_transient_kernel_vs_spice(n):
+    rf = np.linspace(0.02, 0.98, n)
+    cf = np.linspace(0.0, 1.0, n)
+    kr = rc_pallas(rf, cf, interpret=True)
+    rr = ref.rc_transient(rf, cf)
+    np.testing.assert_allclose(np.asarray(kr["sense_t"]), rr["sense_t"], atol=0.02)
+    np.testing.assert_allclose(np.asarray(kr["v_cell"]), rr["v_cell"], atol=2e-3)
+    np.testing.assert_allclose(np.asarray(kr["v_probe"]), rr["v_probe"], atol=2e-3)
+
+
+def test_rc_transient_monotone_in_distance():
+    rf = np.linspace(0.05, 0.95, 8)
+    out = np.asarray(rc_pallas(rf, np.zeros(8), interpret=True)["sense_t"])
+    assert np.all(np.diff(out) >= -1e-6)
+
+
+@pytest.mark.parametrize("B,S,H,dh", [(1, 64, 1, 8), (2, 96, 2, 16),
+                                      (3, 130, 4, 32), (2, 64, 2, 64)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_wkv6_kernel_sweep(B, S, H, dh, dtype):
+    r, k, v, w = (RNG.normal(0, 0.5, (B, S, H, dh)).astype(dtype) for _ in range(4))
+    u = RNG.normal(0, 0.1, (H, dh)).astype(np.float32)
+    yk = np.asarray(wkv6_pallas(r, k, v, w, u, interpret=True), np.float32)
+    yr = np.asarray(ref.wkv6(r, k, v, w, u), np.float32)
+    tol = 2e-3 if dtype == np.float16 else 3e-4
+    np.testing.assert_allclose(yk, yr, rtol=tol, atol=tol)
+
+
+def test_ops_dispatch_ref_mode(monkeypatch):
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    data = RNG.integers(0, 2, (16, 64)).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(ops.secded_encode(data)),
+                                  np.asarray(ref.secded_encode(data)))
