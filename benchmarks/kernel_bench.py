@@ -1,10 +1,22 @@
 """Kernel micro-benchmarks (interpret mode on CPU; numbers are for CI
-tracking, not TPU performance — the roofline story lives in EXPERIMENTS.md)."""
+tracking, not TPU performance — the roofline story lives in EXPERIMENTS.md).
+
+``--smoke`` times the tentpole: one jitted ``profile_population`` sweep over
+a DIMM population vs the legacy per-DIMM NumPy walker, and prints the
+speedup (CI asserts it stays >= 5x on CPU).
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py --smoke
+"""
 from __future__ import annotations
 
+import argparse
+import sys
 import time
+from pathlib import Path
 
 import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 
 def _bench(fn, *args, iters=3, **kw):
@@ -29,4 +41,72 @@ def kernels():
     r, k, v, w = (rng.normal(0, 0.3, (2, 128, 4, 32)).astype(np.float32) for _ in range(4))
     u = rng.normal(0, 0.1, (4, 32)).astype(np.float32)
     out["wkv6_2x128x4x32_us"] = round(_bench(ops.wkv6, r, k, v, w, u), 1)
+    row_src = rng.integers(0, 512, 512).astype(np.int32)
+    d_mat = np.linspace(0.1, 1.0, 8).astype(np.float32)
+    coeffs = np.array([3.9, 2.1, 0.4, 0.8, 0.4, 7.5, 0.15, 3e-6, 3.5],
+                      np.float32)
+    out["fail_prob_8x512x128_us"] = round(
+        _bench(ops.fail_prob, row_src, d_mat, coeffs, cols=128), 1)
     return out
+
+
+def profile_population_speedup(n_dimms: int = 8, iters: int = 1) -> dict:
+    """Wall-clock: one jitted population sweep vs the per-DIMM NumPy walker.
+
+    The legacy loop is timed on the SAME DIMMs with the SAME Monte-Carlo
+    decisions (shared query hash), so the two paths do identical work — the
+    difference is pure batching + jit.
+    """
+    from repro.core.geometry import SMALL
+    from repro.core.population import make_population
+    from repro.core.profiling import diva_profile_loop
+    from repro.core.substrate import DimmBatch, profile_population_arrays
+
+    pop = make_population(SMALL, n_dimms)
+    batch = DimmBatch.from_population(pop)
+
+    profile_population_arrays(batch, temp_C=55.0, multibit_only=True)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        arr = profile_population_arrays(batch, temp_C=55.0, multibit_only=True)
+    t_batched = (time.time() - t0) / iters
+
+    t0 = time.time()
+    for _ in range(iters):
+        legacy = [diva_profile_loop(d, temp_C=55.0) for d in pop]
+    t_loop = (time.time() - t0) / iters
+
+    match = all(tuple(row) == (tp.trcd, tp.tras, tp.trp, tp.twr)
+                for row, tp in zip(np.round(arr, 6), legacy))
+    return {"n_dimms": n_dimms,
+            "batched_ms": round(t_batched * 1e3, 1),
+            "legacy_loop_ms": round(t_loop * 1e3, 1),
+            "speedup": round(t_loop / max(t_batched, 1e-9), 1),
+            "results_match": match}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="profile_population vs legacy loop speedup only")
+    ap.add_argument("--dimms", type=int, default=8)
+    args = ap.parse_args()
+
+    if not args.smoke:
+        # microbenchmark mode: report kernel timings, no gating
+        for k, v in kernels().items():
+            print(f"kernel_{k},{v},interpret-mode")
+        return
+    s = profile_population_speedup(args.dimms)
+    for k, v in s.items():
+        print(f"profile_population_{k},{v}")
+    if not s["results_match"]:
+        sys.exit("FAIL: batched profile != legacy per-DIMM walker")
+    if s["speedup"] < 5.0:
+        sys.exit(f"FAIL: speedup {s['speedup']}x < 5x target")
+    print(f"OK: profile_population {s['speedup']}x faster than legacy loop "
+          f"on {s['n_dimms']} DIMMs")
+
+
+if __name__ == "__main__":
+    main()

@@ -111,7 +111,7 @@ def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
     """Whether an (arch x shape) cell is runnable, plus the reason if not.
 
     ``long_500k`` requires sub-quadratic sequence mixing: only SSM/hybrid
-    archs qualify (see DESIGN.md section 4). Full-attention archs are skipped
+    archs qualify. Full-attention archs are skipped
     per the assignment. All archs here have a decoder, so decode shapes apply
     everywhere.
     """

@@ -6,21 +6,28 @@ timing parameter, wait a refresh interval, verify; 10 iterations; errors are
 aggregated per external row / per column / per burst bit.
 
 Everything is computed on (mats_x, rows, cols) probability grids; counts are
-binomially sampled so different iterations/DIMMs decorrelate realistically.
+Poisson sampled so different iterations/DIMMs decorrelate realistically.
+Every sampling query derives its own deterministic seed from the query key
+(DIMM serial, parameter, operating point, ...), so results never depend on
+call order.  ``region_has_errors`` shares its uniform draws with the batched
+substrate (core/substrate.py) via the same counter hash, which is what lets
+``profile_population`` reproduce the legacy per-DIMM walker exactly.
+
+This module is the NumPy reference; the population-scale path lives in
+core/substrate.py + kernels/fail_prob.py.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.geometry import DimmGeometry, burst_bit_to_mat
-from repro.core.latency import (PATTERN_STRESS, VendorModel, fail_probability,
-                                t_req_grid)
-from repro.core.timing import STANDARD, TimingParams
-
-DEFAULT_PATTERNS = ("0000", "0101", "0011", "1001")
-DEFAULT_ITERS = 10
+from repro.core.latency import (DEFAULT_ITERS, DEFAULT_PATTERNS, VendorModel,
+                                fail_mixture, multibit_tail, t_req_grid)
+from repro.core.substrate import quantize_t, query_uniform
+from repro.core.timing import PARAMS
 
 
 @dataclass
@@ -41,7 +48,14 @@ class DimmModel:
         n_rows = self.geom.rows_per_mat
         self.repaired = rng.random((self.geom.subarrays, n_rows)) < self.vendor.repair_rate
         self.repair_perm = rng.integers(0, n_rows, (self.geom.subarrays, n_rows))
-        self._rng = rng
+
+    def _query_rng(self, kind: str, param: str, t_op: float,
+                   **key) -> np.random.Generator:
+        """Per-query deterministic RNG: same query => same sample, no matter
+        how many other queries ran in between."""
+        tag = "-".join(f"{k}={v}" for k, v in sorted(key.items()))
+        s = f"{self.serial}-{kind}-{param}-{quantize_t(t_op)}-{tag}"
+        return np.random.default_rng(zlib.crc32(s.encode()))
 
     # ---------------------------------------------------------------- grids
 
@@ -49,16 +63,17 @@ class DimmModel:
                        refresh_ms=64.0, pattern="0101", chip: int = 0,
                        subarray: int = 0) -> np.ndarray:
         """(mats_x, rows, cols) failure probability for one chip/subarray,
-        indexed by INTERNAL row order."""
+        indexed by INTERNAL row order (float32, mirroring the substrate)."""
         t = t_req_grid(self.geom, self.vendor, param, temp_C=temp_C,
                        refresh_ms=refresh_ms, age_years=self.age_years,
                        pattern=pattern)
-        t = t + self.chip_offsets[chip] + self.sub_offsets[subarray]
-        p = fail_probability(t, t_op, self.vendor.sigma)
-        # heavy-tail weak cells: random outliers with extra required latency
-        # (the scattered single-bit errors that ECC absorbs — Sec 6.1/App C)
-        p_out = fail_probability(t + self.vendor.outlier_ns, t_op, self.vendor.sigma)
-        p = (1.0 - self.vendor.outlier_rate) * p + self.vendor.outlier_rate * p_out
+        t = t + np.float32(self.chip_offsets[chip])
+        t = t + np.float32(self.sub_offsets[subarray])
+        # heavy-tail weak cells folded in: the scattered single-bit errors
+        # that ECC absorbs (Sec 6.1/App C)
+        p = fail_mixture(t, t_op, np.float32(self.vendor.sigma),
+                         np.float32(self.vendor.outlier_rate),
+                         np.float32(self.vendor.outlier_ns))
         # row repair: repaired rows take the profile of their replacement row
         rep = self.repaired[subarray]
         perm = self.repair_perm[subarray]
@@ -76,11 +91,16 @@ class DimmModel:
 
         With ``internal_order=True`` rows are reported in internal
         (distance-ordered) addressing — what the scramble hides (Sec 5.3).
+        The sample is drawn in internal order then scattered, so both views
+        report the same underlying errors.
         """
         R = self.geom.rows_per_mat
+        rng = self._query_rng("rows", param, t_op, temp=temp_C,
+                              refresh=refresh_ms, iters=iters,
+                              patterns=patterns)
         out = np.zeros(self.geom.subarrays * R)
         for sub in range(self.geom.subarrays):
-            exp_row = np.zeros(R)
+            exp_row = np.zeros(R, np.float32)
             for pat in patterns:
                 # pattern + inverse both tested: ~2x trials
                 p = self.fail_prob_grid(param, t_op, temp_C=temp_C,
@@ -89,7 +109,7 @@ class DimmModel:
                 exp_row += 2 * p.sum(axis=(0, 2)) * self.geom.chips
             n_trials = iters
             lam = exp_row * n_trials
-            counts = self._rng.poisson(lam) if sample else lam
+            counts = rng.poisson(lam) if sample else lam
             if not internal_order:
                 ext = self.vendor.scramble.int_to_ext(np.arange(R))
                 ext_counts = np.zeros(R)
@@ -97,6 +117,17 @@ class DimmModel:
                 counts = ext_counts
             out[sub * R:(sub + 1) * R] = counts
         return out
+
+    def sample_row_counts(self, lam, param: str, t_op: float, *, temp_C=85.0,
+                          refresh_ms=64.0, patterns=DEFAULT_PATTERNS,
+                          iters=DEFAULT_ITERS) -> np.ndarray:
+        """Poisson-sample row error counts from a precomputed expectation
+        (e.g. the batched ``substrate.row_error_lambda``), drawing from the
+        same per-query stream family as ``row_error_counts``."""
+        rng = self._query_rng("rows", param, t_op, temp=temp_C,
+                              refresh=refresh_ms, iters=iters,
+                              patterns=patterns)
+        return rng.poisson(lam)
 
     # ---------------------------------------------------------- per-column
 
@@ -110,7 +141,9 @@ class DimmModel:
         concatenated along the column axis so the Fig 8 mat-boundary jumps
         are visible."""
         g = self.geom
-        row_sel = self._rng.integers(0, g.rows_per_mat, rows)
+        rng = self._query_rng("cols", param, t_op, rows=rows, temp=temp_C,
+                              refresh=refresh_ms, iters=iters)
+        row_sel = rng.integers(0, g.rows_per_mat, rows)
         cnt = np.zeros((rows, g.mats_x * 8)) if per_row else np.zeros(g.mats_x * 8)
         # 8 column strides per mat sampled (128 column commands per row in the
         # paper's setup)
@@ -121,9 +154,9 @@ class DimmModel:
             sub = p[:, row_sel][:, :, col_sel]  # (mats, rows, 8)
             lam = 2 * iters * self.geom.chips * np.moveaxis(sub, 0, 1).reshape(rows, -1)
             if per_row:
-                cnt += self._rng.poisson(lam)
+                cnt += rng.poisson(lam)
             else:
-                cnt += self._rng.poisson(lam).sum(axis=0)
+                cnt += rng.poisson(lam).sum(axis=0)
         return cnt
 
     # --------------------------------------------------------- per-burst-bit
@@ -135,18 +168,21 @@ class DimmModel:
         (Fig 12): bit j reads from mat burst_bit_to_mat(j) at a column
         position that advances within the mat."""
         g = self.geom
+        rng = self._query_rng("burst", param, t_op, temp=temp_C,
+                              refresh=refresh_ms, iters=iters,
+                              n=n_accesses)
         out = np.zeros((g.chips, g.burst_bits))
         bits = np.arange(g.burst_bits)
         mats = burst_bit_to_mat(g, bits)
         within = bits % g.bits_per_mat_in_burst
         cols = (within * (g.cols_per_mat // g.bits_per_mat_in_burst)
                 + g.cols_per_mat // (2 * g.bits_per_mat_in_burst))
-        rows = self._rng.integers(0, g.rows_per_mat, n_accesses)
+        rows = rng.integers(0, g.rows_per_mat, n_accesses)
         for chip in range(g.chips):
             p = self.fail_prob_grid(param, t_op, temp_C=temp_C,
                                     refresh_ms=refresh_ms, chip=chip)
             lam = iters * p[mats, :, :][:, rows, :][np.arange(64), :, cols].sum(axis=1)
-            out[chip] = self._rng.poisson(lam)
+            out[chip] = rng.poisson(lam)
         return out
 
     # ----------------------------------------------------------- aggregates
@@ -164,30 +200,31 @@ class DimmModel:
         profiled timing must produce no MULTI-bit errors per 72-bit codeword;
         random single-bit failures are SECDED-correctable and tolerated.
 
-        Sampling uses a per-query deterministic RNG so repeated profiles of
-        the same DIMM at the same operating point agree.
+        The accept/reject draw is ``u < P(N_errors > 0)`` with ``u`` from the
+        per-query counter hash shared with core/substrate.py — deterministic,
+        and bit-identical between this walker and ``profile_population``.
         """
-        import zlib
-        rng = np.random.default_rng(
-            zlib.crc32(f"{self.serial}-{param}-{round(t_op * 4)}-{multibit_only}".encode()))
-        for sub in range(self.geom.subarrays):
-            for pat in patterns:
+        S, P = self.geom.subarrays, len(patterns)
+        u = query_uniform(np.full((S, P), self.serial, np.uint32),
+                          PARAMS.index(param), quantize_t(t_op),
+                          int(multibit_only), np.arange(S)[:, None],
+                          np.arange(P)[None, :])
+        for sub in range(S):
+            for pi, pat in enumerate(patterns):
                 p = self.fail_prob_grid(param, t_op, pattern=pat, subarray=sub,
                                         temp_C=temp_C, refresh_ms=refresh_ms)
                 region = p[:, internal_rows, :]
                 if not multibit_only:
                     lam = 2 * iters * self.geom.chips * region.sum()
-                    if rng.poisson(lam) > 0:
-                        return True
                 else:
                     # P(>=2 errors in a 72-bit codeword) with per-bit prob ~p;
                     # each cell contributes 1/72 of a codeword, so the sum of
                     # per-cell p_multi is divided by the codeword width.
-                    q = np.clip(region, 0.0, 1.0)
-                    p_multi = np.clip(1 - (1 - q) ** 72 - 72 * q * (1 - q) ** 71, 0.0, 1.0)
-                    lam = max(2 * iters * self.geom.chips * float(p_multi.sum()) / 72.0, 0.0)
-                    if rng.poisson(lam) > 0:
-                        return True
+                    p_multi = multibit_tail(region)
+                    lam = np.maximum(
+                        2 * iters * self.geom.chips * p_multi.sum() / 72.0, 0.0)
+                if u[sub, pi] < -np.expm1(-lam):
+                    return True
         return False
 
 

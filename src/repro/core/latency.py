@@ -88,45 +88,98 @@ def vendor_models(geom: DimmGeometry) -> dict[str, VendorModel]:
 # Data patterns (Section 4): row-stripe patterns stress bitlines differently.
 PATTERN_STRESS = {"0000": 0.90, "0101": 1.00, "0011": 0.96, "1001": 0.94}
 
+# Test-campaign defaults (Section 4 methodology); re-exported by core.errors.
+DEFAULT_PATTERNS = ("0000", "0101", "0011", "1001")
+DEFAULT_ITERS = 10
+
+
+def condition_scalars(temp_C: float, refresh_ms: float):
+    """(temp delta, log2 refresh ratio) as f32 — the dynamic operating point."""
+    return (np.float32(temp_C - 85.0),
+            np.float32(np.log2(max(refresh_ms, 1.0) / 64.0)))
+
+
+def condition_adder(vm: VendorModel, temp_C: float, refresh_ms: float,
+                    age_years: float) -> np.float32:
+    """Scalar operating-condition term (Sec 5.5 / 6.1) in float32, with the
+    SAME op order as the batched substrate's host-side adder — both paths add
+    literally identical bits to the t_req grid."""
+    t_delta, r_log = condition_scalars(temp_C, refresh_ms)
+    return (np.float32(vm.temp_coef) * t_delta
+            + np.float32(vm.refresh_coef) * r_log
+            + np.float32(vm.aging_coef) * np.float32(age_years))
+
 
 def t_req_grid(geom: DimmGeometry, vm: VendorModel, param: str, *,
                temp_C: float = 85.0, refresh_ms: float = 64.0,
                age_years: float = 0.0, pattern: str = "0101") -> np.ndarray:
-    """Deterministic required timing, shape (mats_x, rows_per_mat, cols_per_mat)."""
+    """Deterministic required timing, shape (mats_x, rows_per_mat, cols_per_mat).
+
+    Computed in float32 end to end, with the same operation order as the
+    batched substrate (core/substrate.py) so that both paths agree to ~1 ulp.
+    """
     R, C, M = geom.rows_per_mat, geom.cols_per_mat, geom.mats_x
-    rows = np.arange(R)[None, :, None]
-    cols = np.arange(C)[None, None, :]
-    mx = np.arange(M)[:, None, None]
-    d_bl = bitline_distance(geom, rows, cols)                     # (1,R,C)
-    d_wl = wordline_distance(geom, cols)                          # (1,1,C)
-    d_mat = precharge_delay(geom, np.arange(M))[:, None, None]    # (M,1,1)
+    rows = np.arange(R, dtype=np.float32)[None, :, None]
+    cols32 = np.arange(C, dtype=np.float32)[None, None, :]
+    d_bl = bitline_distance(geom, rows, np.arange(C)[None, None, :])  # (1,R,C) f32
+    d_wl = wordline_distance(geom, cols32)                            # (1,1,C) f32
+    d_mat = precharge_delay(geom, np.arange(M, dtype=np.float32))[:, None, None]
 
     stress = PATTERN_STRESS[pattern]
     d_row = rows / (R - 1)
-    var = (vm.k_bl[param] * d_bl + vm.k_wl[param] * d_wl + vm.k_mat[param] * d_mat
-           + vm.k_row[param] * d_row)
-    t = vm.base[param] + stress * var
-    t = t + vm.temp_coef * (temp_C - 85.0)
-    t = t + vm.refresh_coef * np.log2(max(refresh_ms, 1.0) / 64.0)
-    t = t + vm.aging_coef * age_years
+    var = (np.float32(vm.k_bl[param]) * d_bl + np.float32(vm.k_wl[param]) * d_wl
+           + np.float32(vm.k_mat[param]) * d_mat
+           + np.float32(vm.k_row[param]) * d_row)
+    t = np.float32(vm.base[param]) + stress * var
+    t = t + condition_adder(vm, temp_C, refresh_ms, age_years)
     return t.astype(np.float32)
 
 
-def fail_probability(t_req_det: np.ndarray, t_op: float, sigma: float) -> np.ndarray:
-    """P(cell fails) = Phi((t_req_det - t_op)/sigma) (Gaussian noise fold)."""
+def fail_probability(t_req_det, t_op, sigma, xp=np):
+    """P(cell fails) = Phi((t_req_det - t_op)/sigma) (Gaussian noise fold).
+
+    ``xp`` selects the array namespace (numpy for the legacy per-DIMM path,
+    jax.numpy for the batched substrate) — one op order, two backends.
+    """
     from math import sqrt
-    z = (t_req_det - t_op) / max(sigma, 1e-6)
+    z = (t_req_det - t_op) / xp.maximum(sigma, 1e-6)
     # stable erf-based normal CDF
-    return 0.5 * (1.0 + _erf(z / sqrt(2.0)))
+    return 0.5 * (1.0 + _erf(z / sqrt(2.0), xp))
 
 
-def _erf(x):
-    # Abramowitz-Stegun 7.1.26 vectorized (keeps numpy-only dependency)
-    sign = np.sign(x)
-    x = np.abs(x)
+def fail_mixture(t_req_det, t_op, sigma, outlier_rate, outlier_ns, xp=np):
+    """Failure probability with the heavy-tail weak-cell mixture folded in
+    (the scattered single-bit errors that ECC absorbs — Sec 6.1/App C)."""
+    p = fail_probability(t_req_det, t_op, sigma, xp)
+    p_out = fail_probability(t_req_det + outlier_ns, t_op, sigma, xp)
+    return (1.0 - outlier_rate) * p + outlier_rate * p_out
+
+
+def multibit_tail(q, width: int = 72, xp=np):
+    """P(>= 2 of ``width`` bits fail | per-bit prob q) — the SECDED
+    uncorrectable-codeword probability (Sec 6.1).
+
+    Written in expm1/log1p form: the naive ``1-(1-q)^w - w*q*(1-q)^(w-1)``
+    cancels catastrophically in float32 for q << 1 (it overstates the tail by
+    orders of magnitude and even breaks monotonicity in t_op), while this form
+    stays accurate down to q ~ 1e-8 on both numpy and jax.numpy.
+    """
+    # upper clip just below 1 keeps log1p finite; for q this close to 1 the
+    # tail is 1 to float32 precision anyway
+    q = xp.clip(q, 0.0, 0.999999)
+    log1mq = xp.log1p(-q)
+    none_fail = -xp.expm1(width * log1mq)             # 1 - (1-q)^w
+    one_fails = width * q * xp.exp((width - 1) * log1mq)
+    return xp.clip(none_fail - one_fails, 0.0, 1.0)
+
+
+def _erf(x, xp=np):
+    # Abramowitz-Stegun 7.1.26 vectorized (works on numpy and jax.numpy)
+    sign = xp.sign(x)
+    x = xp.abs(x)
     t = 1.0 / (1.0 + 0.3275911 * x)
     y = 1.0 - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
-                - 0.284496736) * t + 0.254829592) * t * np.exp(-x * x)
+                - 0.284496736) * t + 0.254829592) * t * xp.exp(-x * x)
     return sign * y
 
 

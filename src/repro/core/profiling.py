@@ -12,6 +12,13 @@ cost (Appendix A: 625 ms vs 1.22 ms per pattern for a 4GB DIMM).
 AL-DRAM is the static baseline: it profiles once at install time and never
 re-profiles, so aging drift eventually makes its table unsafe (Sec 6.1 fn 2)
 — while DIVA's periodic online profiling follows the drift.
+
+``diva_profile`` / ``conventional_profile`` are thin compatibility wrappers:
+they build a single-DIMM ``DimmBatch`` and run the jitted population sweep in
+core/substrate.py.  The original NumPy walkers survive as
+``diva_profile_loop`` / ``conventional_profile_loop`` — the reference (and
+benchmark baseline) that ``profile_population`` reproduces exactly, decision
+for decision, via the shared per-query uniform hash.
 """
 from __future__ import annotations
 
@@ -21,6 +28,7 @@ import numpy as np
 
 from repro.core.errors import DEFAULT_ITERS, DEFAULT_PATTERNS, DimmModel
 from repro.core.latency import worst_rows_internal
+from repro.core.substrate import DimmBatch, profile_population
 from repro.core.timing import CYCLE_NS, PARAMS, STANDARD, TimingParams, timing_grid
 
 
@@ -39,7 +47,28 @@ def diva_test_bytes(dimm_bytes: int, rows_per_subarray: int = 512) -> int:
     return dimm_bytes // rows_per_subarray
 
 
-# ------------------------------------------------------------- profilers
+# ------------------------------------------------- batched profilers (hot)
+
+def diva_profile(dimm: DimmModel, *, temp_C=55.0, refresh_ms=64.0,
+                 guard_cycles: int = 1, with_ecc: bool = True) -> TimingParams:
+    """Profile only the latency test region (slowest rows per subarray).
+    With ECC (the DIVA-DRAM configuration), the criterion is no *multi-bit*
+    errors — random singles are SECDED-correctable (Sec 6.1)."""
+    return profile_population(DimmBatch.from_population([dimm]),
+                              region="worst", temp_C=temp_C,
+                              refresh_ms=refresh_ms, guard_cycles=guard_cycles,
+                              multibit_only=with_ecc)[0]
+
+
+def conventional_profile(dimm: DimmModel, *, temp_C=55.0, refresh_ms=64.0,
+                         guard_cycles: int = 1) -> TimingParams:
+    """Profile every row (the expensive reference)."""
+    return profile_population(DimmBatch.from_population([dimm]),
+                              region="all", temp_C=temp_C,
+                              refresh_ms=refresh_ms, guard_cycles=guard_cycles)[0]
+
+
+# ------------------------------------------------- legacy NumPy walkers
 
 def _min_safe(dimm: DimmModel, param: str, rows_internal, *, temp_C, refresh_ms,
               guard_cycles: int = 1, patterns=DEFAULT_PATTERNS,
@@ -59,8 +88,8 @@ def _min_safe(dimm: DimmModel, param: str, rows_internal, *, temp_C, refresh_ms,
     return min(best + guard_cycles * CYCLE_NS, getattr(STANDARD, param))
 
 
-def _profile(dimm: DimmModel, rows, *, temp_C, refresh_ms, guard_cycles,
-             multibit_only: bool = False) -> TimingParams:
+def _profile_loop(dimm: DimmModel, rows, *, temp_C, refresh_ms, guard_cycles,
+                  multibit_only: bool = False) -> TimingParams:
     """tRCD first; tRAS's sweep floor then tracks the reduced tRCD + 10 ns
     (the infrastructure constraint of Section 4)."""
     kw = dict(temp_C=temp_C, refresh_ms=refresh_ms, guard_cycles=guard_cycles,
@@ -72,21 +101,19 @@ def _profile(dimm: DimmModel, rows, *, temp_C, refresh_ms, guard_cycles,
     return TimingParams(trcd=trcd, tras=tras, trp=trp, twr=twr)
 
 
-def diva_profile(dimm: DimmModel, *, temp_C=55.0, refresh_ms=64.0,
-                 guard_cycles: int = 1, with_ecc: bool = True) -> TimingParams:
-    """Profile only the latency test region (slowest rows per subarray).
-    With ECC (the DIVA-DRAM configuration), the criterion is no *multi-bit*
-    errors — random singles are SECDED-correctable (Sec 6.1)."""
-    return _profile(dimm, worst_rows_internal(dimm.geom), temp_C=temp_C,
-                    refresh_ms=refresh_ms, guard_cycles=guard_cycles,
-                    multibit_only=with_ecc)
+def diva_profile_loop(dimm: DimmModel, *, temp_C=55.0, refresh_ms=64.0,
+                      guard_cycles: int = 1,
+                      with_ecc: bool = True) -> TimingParams:
+    """The original serial per-DIMM walker (reference / benchmark baseline)."""
+    return _profile_loop(dimm, worst_rows_internal(dimm.geom), temp_C=temp_C,
+                         refresh_ms=refresh_ms, guard_cycles=guard_cycles,
+                         multibit_only=with_ecc)
 
 
-def conventional_profile(dimm: DimmModel, *, temp_C=55.0, refresh_ms=64.0,
-                         guard_cycles: int = 1) -> TimingParams:
-    """Profile every row (the expensive reference)."""
-    return _profile(dimm, np.arange(dimm.geom.rows_per_mat), temp_C=temp_C,
-                    refresh_ms=refresh_ms, guard_cycles=guard_cycles)
+def conventional_profile_loop(dimm: DimmModel, *, temp_C=55.0, refresh_ms=64.0,
+                              guard_cycles: int = 1) -> TimingParams:
+    return _profile_loop(dimm, np.arange(dimm.geom.rows_per_mat), temp_C=temp_C,
+                         refresh_ms=refresh_ms, guard_cycles=guard_cycles)
 
 
 @dataclass

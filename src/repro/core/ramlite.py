@@ -1,7 +1,8 @@
 """Ramulator-lite: bank-state DRAM timing simulation + multicore IPC model.
 
 Reproduces the *relative* system speedups of Fig 19 (we have no x86/PinPoints
-traces offline — see DESIGN.md section 7). Workloads are (MPKI, row-hit-rate,
+traces offline, so workloads are synthetic — see ARCHITECTURE.md for where
+this sits in the layer stack). Workloads are (MPKI, row-hit-rate,
 bank-parallelism) tuples spanning the paper's Stream/SPEC/TPC/GUPS range; a
 ``lax.scan`` walks a synthetic request trace through per-bank state (open
 row, ready time) under FR-FCFS-ish service rules derived from the four

@@ -1,0 +1,419 @@
+"""Batched characterization substrate: the whole DIMM population as one pytree.
+
+``DimmBatch`` lowers a list of ``DimmModel`` objects (core/errors.py) into
+stacked arrays — per-DIMM vendor coefficients, chip/subarray offsets,
+repair-resolved row-source tables, scramble tables — built once from
+``core/population.py`` output.  Everything downstream is array programs:
+
+  * ``fail_prob_grids``    — (D, mats, rows, cols) failure-probability grids
+                             through the Pallas kernel (kernels/fail_prob.py,
+                             dispatched by kernels/ops.py).
+  * ``row_error_lambda``   — expected per-row error counts for the whole
+                             population in one jitted call (Figs 6/7/14).
+  * ``profile_population`` — DIVA / conventional profiling of every DIMM as a
+                             single jitted ``lax.scan`` over the timing grid
+                             (Sec 6.1); no Python loop over DIMMs, subarrays
+                             or patterns.
+
+Monte-Carlo decisions use a counter-based hash (``query_uniform``) computed
+identically by numpy (legacy per-DIMM path in core/errors.py) and jax (this
+module), so the batched profiler reproduces the legacy walker bit-for-bit on
+the uniform draws.  The profiling sweep itself uses fused jnp (regions are
+reduction-dominated and tiny for DIVA); the Pallas kernel serves the
+full-grid queries where the (mats, rows, cols) tensor is the product.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.geometry import (DimmGeometry, precharge_delay,
+                                 wordline_distance)
+from repro.core.latency import (DEFAULT_ITERS, DEFAULT_PATTERNS,
+                                PATTERN_STRESS, condition_scalars,
+                                fail_mixture, multibit_tail,
+                                worst_rows_internal)
+from repro.core.timing import CYCLE_NS, PARAMS, STANDARD, TimingParams, timing_grid
+
+if TYPE_CHECKING:  # avoid an import cycle: errors.py imports query_uniform
+    from repro.core.errors import DimmModel
+
+# Fixed sweep grids (Section 4 FPGA quantization) — static per parameter.
+GRIDS = {p: tuple(timing_grid(p)) for p in PARAMS}
+
+
+# ----------------------------------------------------------------- hashing
+
+_GOLD = 0x9E3779B9
+
+
+def _mix32(h, xp):
+    h = h ^ (h >> 16)
+    h = h * xp.uint32(0x7FEB352D)
+    h = h ^ (h >> 15)
+    h = h * xp.uint32(0x846CA68B)
+    h = h ^ (h >> 16)
+    return h
+
+
+def query_uniform(serial, param_idx, t_q, multibit, sub, pat, xp=np):
+    """Deterministic uniform in [0, 1) for one Monte-Carlo profiling query.
+
+    Pure function of (DIMM serial, timing parameter, quantized t_op, ECC
+    criterion, subarray, pattern index) — the same bits from numpy and
+    jax.numpy, so the legacy walker and the batched sweep agree exactly.
+    Inputs broadcast; pass arrays (not 0-d scalars) on the numpy side.
+    """
+    u32 = lambda v: xp.asarray(v, xp.uint32)
+    h = u32(serial) * xp.uint32(_GOLD)
+    h = _mix32(h ^ (u32(param_idx) * xp.uint32(0x85EBCA6B)), xp)
+    h = _mix32(h ^ (u32(t_q) * xp.uint32(0xC2B2AE35)), xp)
+    h = _mix32(h ^ (u32(multibit) + u32(sub) * xp.uint32(0x27D4EB2F)
+                    + u32(pat) * xp.uint32(0x165667B1)), xp)
+    # top 24 bits -> exactly representable float32 in [0, 1)
+    return (h >> 8).astype(xp.float32) * xp.float32(1.0 / (1 << 24))
+
+
+def quantize_t(t_op) -> int:
+    """The hash's t_op key: quarter-ns quantization (grid values are exact)."""
+    return int(round(float(t_op) * 4))
+
+
+# ------------------------------------------------------------- the batch
+
+_LEAVES = ("serial", "base", "k_bl", "k_wl", "k_mat", "k_row", "sigma",
+           "temp_coef", "refresh_coef", "aging_coef", "age_years",
+           "outlier_rate", "outlier_ns", "chip_offsets", "sub_offsets",
+           "row_src", "int_to_ext", "ext_to_int")
+
+
+@dataclass
+class DimmBatch:
+    """Stacked per-DIMM state; leading axis D on every leaf, geometry static.
+
+    Coefficient tables are (D, 4) in ``timing.PARAMS`` order; ``row_src`` is
+    the repair-resolved internal row source per (D, subarray, row) — repaired
+    rows point at their replacement row, everything else at itself.
+    """
+    geom: DimmGeometry
+    serial: Any          # (D,) uint32
+    base: Any            # (D, 4) f32
+    k_bl: Any            # (D, 4) f32
+    k_wl: Any            # (D, 4) f32
+    k_mat: Any           # (D, 4) f32
+    k_row: Any           # (D, 4) f32
+    sigma: Any           # (D,) f32
+    temp_coef: Any       # (D,) f32
+    refresh_coef: Any    # (D,) f32
+    aging_coef: Any      # (D,) f32
+    age_years: Any       # (D,) f32
+    outlier_rate: Any    # (D,) f32
+    outlier_ns: Any      # (D,) f32
+    chip_offsets: Any    # (D, chips) f32
+    sub_offsets: Any     # (D, subarrays) f32
+    row_src: Any         # (D, subarrays, R) int32
+    int_to_ext: Any      # (D, R) int32
+    ext_to_int: Any      # (D, R) int32
+
+    @property
+    def n_dimms(self) -> int:
+        return int(self.serial.shape[0])
+
+    def replace(self, **kw) -> "DimmBatch":
+        return dataclasses.replace(self, **kw)
+
+    @classmethod
+    def from_population(cls, dimms: Sequence["DimmModel"]) -> "DimmBatch":
+        """Stack DimmModels (all sharing one geometry) into array leaves."""
+        if not dimms:
+            raise ValueError("empty population: DimmBatch needs >= 1 DimmModel")
+        geom = dimms[0].geom
+        assert all(d.geom == geom for d in dimms), "mixed geometries in batch"
+        R = geom.rows_per_mat
+        rows = np.arange(R)
+        f32 = lambda v: np.asarray(v, np.float32)
+
+        def coeff(attr):
+            return f32([[getattr(d.vendor, attr)[p] for p in PARAMS]
+                        for d in dimms])
+
+        row_src = np.stack([
+            np.where(d.repaired, d.repair_perm, rows[None, :]) for d in dimms
+        ]).astype(np.int32)
+        return cls(
+            geom=geom,
+            serial=np.asarray([d.serial for d in dimms], np.uint32),
+            base=coeff("base"), k_bl=coeff("k_bl"), k_wl=coeff("k_wl"),
+            k_mat=coeff("k_mat"), k_row=coeff("k_row"),
+            sigma=f32([d.vendor.sigma for d in dimms]),
+            temp_coef=f32([d.vendor.temp_coef for d in dimms]),
+            refresh_coef=f32([d.vendor.refresh_coef for d in dimms]),
+            aging_coef=f32([d.vendor.aging_coef for d in dimms]),
+            age_years=f32([d.age_years for d in dimms]),
+            outlier_rate=f32([d.vendor.outlier_rate for d in dimms]),
+            outlier_ns=f32([d.vendor.outlier_ns for d in dimms]),
+            chip_offsets=f32([d.chip_offsets for d in dimms]),
+            sub_offsets=f32([d.sub_offsets for d in dimms]),
+            row_src=row_src,
+            int_to_ext=np.stack([np.asarray(d.vendor.scramble.int_to_ext(rows))
+                                 for d in dimms]).astype(np.int32),
+            ext_to_int=np.stack([np.asarray(d.vendor.scramble.ext_to_int(rows))
+                                 for d in dimms]).astype(np.int32),
+        )
+
+
+def _flatten(b: DimmBatch):
+    return [getattr(b, n) for n in _LEAVES], b.geom
+
+
+def _unflatten(geom, leaves):
+    return DimmBatch(geom, *leaves)
+
+
+jax.tree_util.register_pytree_node(DimmBatch, _flatten, _unflatten)
+
+
+def pattern_stress(patterns=DEFAULT_PATTERNS) -> np.ndarray:
+    return np.asarray([PATTERN_STRESS[p] for p in patterns], np.float32)
+
+
+def _geom_consts(geom: DimmGeometry):
+    """Static f32 distance tables shared by every DIMM (same die floorplan)."""
+    C, M = geom.cols_per_mat, geom.mats_x
+    d_wl = np.asarray(wordline_distance(geom, np.arange(C, dtype=np.float32)),
+                      np.float32)
+    d_mat = np.asarray(precharge_delay(geom, np.arange(M, dtype=np.float32)),
+                       np.float32)
+    even = (np.arange(C) % 2) == 0 if geom.open_bitline else np.ones(C, bool)
+    return d_wl, d_mat, even
+
+
+def condition_adders(batch: DimmBatch, temp_C: float,
+                     refresh_ms: float) -> np.ndarray:
+    """(D,) f32 operating-condition adders, computed HOST-side in numpy with
+    the same op order as ``latency.condition_adder`` — the per-DIMM walker and
+    the jitted sweep add literally identical bits (parity by construction,
+    immune to XLA FMA contraction)."""
+    t_delta, r_log = condition_scalars(temp_C, refresh_ms)
+    return (np.asarray(batch.temp_coef, np.float32) * t_delta
+            + np.asarray(batch.refresh_coef, np.float32) * r_log
+            + np.asarray(batch.aging_coef, np.float32)
+            * np.asarray(batch.age_years, np.float32))
+
+
+# ------------------------------------------------- region failure decisions
+
+def _region_fail_lambda(batch: DimmBatch, pidx: int, t_op, rows, stress,
+                        adder, iters: int, multibit: bool):
+    """(D,) bool: does the row region fail the Monte-Carlo test at t_op?
+
+    Mirrors ``DimmModel.region_has_errors`` op-for-op in float32; subarrays
+    ride a lax.scan (memory), patterns/DIMMs are broadcast axes.  ``adder`` is
+    the (D,) host-computed operating-condition term (condition_adders).
+    """
+    g = batch.geom
+    R, C, S = g.rows_per_mat, g.cols_per_mat, g.subarrays
+    chips = g.chips
+    d_wl, d_mat, even = _geom_consts(g)
+
+    base = batch.base[:, pidx]
+    kbl, kwl = batch.k_bl[:, pidx], batch.k_wl[:, pidx]
+    kmat, krow = batch.k_mat[:, pidx], batch.k_row[:, pidx]
+    chip0 = batch.chip_offsets[:, 0]
+    t_q = jnp.round(t_op * 4).astype(jnp.uint32)
+    P = stress.shape[0]
+    pat_idx = jnp.arange(P)[None, :]
+
+    def per_subarray(acc, s):
+        rsel = jnp.take(jnp.take(batch.row_src, s, axis=1), rows, axis=1)
+        rf = rsel.astype(jnp.float32)                    # (D, Rr)
+        d_bl = jnp.where(even[None, None, :], rf[:, :, None],
+                         (R - 1) - rf[:, :, None]) / (R - 1)   # (D,Rr,C)
+        d_row = rf / (R - 1)
+        var = (kbl[:, None, None, None] * d_bl[:, None, :, :]
+               + kwl[:, None, None, None] * d_wl[None, None, None, :]
+               + kmat[:, None, None, None] * d_mat[None, :, None, None]
+               + krow[:, None, None, None] * d_row[:, None, :, None])
+        t = base[:, None, None, None, None] + stress[None, :, None, None, None] \
+            * var[:, None, :, :, :]                      # (D,P,M,Rr,C)
+        t = t + adder[:, None, None, None, None]
+        t = t + chip0[:, None, None, None, None]
+        t = t + jnp.take(batch.sub_offsets, s, axis=1)[:, None, None, None, None]
+        p = fail_mixture(t, t_op, batch.sigma[:, None, None, None, None],
+                         batch.outlier_rate[:, None, None, None, None],
+                         batch.outlier_ns[:, None, None, None, None], xp=jnp)
+        if multibit:
+            p_multi = multibit_tail(p, xp=jnp)
+            lam = jnp.maximum(
+                2 * iters * chips * p_multi.sum(axis=(2, 3, 4)) / 72.0, 0.0)
+        else:
+            lam = 2 * iters * chips * p.sum(axis=(2, 3, 4))   # (D,P)
+        u = query_uniform(batch.serial[:, None], pidx, t_q, int(multibit),
+                          s, pat_idx, xp=jnp)
+        acc = acc | jnp.any(u < -jnp.expm1(-lam), axis=1)
+        return acc, None
+
+    init = jnp.zeros(batch.serial.shape[0], bool)
+    fails, _ = jax.lax.scan(per_subarray, init, jnp.arange(S))
+    return fails
+
+
+def _sweep_param(batch: DimmBatch, pidx: int, floor, rows, stress, adder,
+                 guard_cycles: int, iters: int, multibit: bool):
+    """lax.scan down one parameter's timing grid; per-DIMM min-safe value.
+
+    Reproduces the legacy walker: stop at the first grid point that fails or
+    undercuts the floor, keep the last safe value, add the guardband.
+    """
+    grid = jnp.asarray(GRIDS[PARAMS[pidx]], jnp.float32)
+    std = getattr(STANDARD, PARAMS[pidx])
+
+    def step(_, t_op):
+        fail = _region_fail_lambda(batch, pidx, t_op, rows, stress, adder,
+                                   iters, multibit)
+        return None, fail | (t_op < floor - 1e-9)
+
+    _, stops = jax.lax.scan(step, None, grid)            # (G, D)
+    ok = jnp.cumsum(stops.astype(jnp.int32), axis=0) == 0
+    best = jnp.min(jnp.where(ok, grid[:, None], jnp.inf), axis=0)
+    best = jnp.where(jnp.isfinite(best), best, std)
+    return jnp.minimum(best + guard_cycles * CYCLE_NS, std)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("guard_cycles", "iters", "multibit"))
+def _profile_jit(batch: DimmBatch, rows, stress, adder, *,
+                 guard_cycles: int, iters: int, multibit: bool):
+    """The whole-population sweep: tRCD first, tRAS floored by tRCD + 10 ns
+    (the Section 4 infrastructure constraint), then tRP and tWR."""
+    D = batch.serial.shape[0]
+    kw = dict(rows=rows, stress=stress, adder=adder,
+              guard_cycles=guard_cycles, iters=iters, multibit=multibit)
+    floor5 = jnp.full((D,), 5.0, jnp.float32)
+    trcd = _sweep_param(batch, 0, floor5, **kw)
+    tras = _sweep_param(batch, 1, trcd + 10.0, **kw)
+    trp = _sweep_param(batch, 2, floor5, **kw)
+    twr = _sweep_param(batch, 3, floor5, **kw)
+    return jnp.stack([trcd, tras, trp, twr], axis=1)
+
+
+def profile_population_arrays(batch: DimmBatch, *, region: str = "worst",
+                              temp_C: float = 55.0, refresh_ms: float = 64.0,
+                              guard_cycles: int = 1,
+                              multibit_only: bool = False,
+                              patterns=DEFAULT_PATTERNS,
+                              iters: int = DEFAULT_ITERS) -> np.ndarray:
+    """(D, 4) profiled timings in PARAMS order; one jitted call for all DIMMs.
+
+    ``region="worst"`` is DIVA Profiling (the design-induced slowest rows);
+    ``region="all"`` is conventional every-row profiling.
+    """
+    if isinstance(region, str):
+        if region == "worst":
+            rows = worst_rows_internal(batch.geom)
+        elif region == "all":
+            rows = np.arange(batch.geom.rows_per_mat)
+        else:
+            raise ValueError(f"unknown region {region!r}; "
+                             "use 'worst', 'all', or an index array")
+    else:
+        rows = np.asarray(region)
+    adder = condition_adders(batch, temp_C, refresh_ms)
+    out = _profile_jit(batch, jnp.asarray(rows, jnp.int32),
+                       jnp.asarray(pattern_stress(patterns)),
+                       jnp.asarray(adder), guard_cycles=guard_cycles,
+                       iters=iters, multibit=multibit_only)
+    return np.asarray(out)
+
+
+def profile_population(batch: DimmBatch, **kw) -> list[TimingParams]:
+    """Per-DIMM ``TimingParams`` for the whole population (see arrays variant)."""
+    arr = profile_population_arrays(batch, **kw)
+    return [TimingParams(*(float(v) for v in row)) for row in arr]
+
+
+# --------------------------------------------------- full-grid batched API
+
+def _pack_coeffs(batch: DimmBatch, pidx: int, t_op, stress, adder,
+                 chip, sub_idx):
+    """(D, 9) folded per-DIMM coefficient rows for the fail_prob kernel;
+    ``adder`` is the host-computed (D,) operating-condition term."""
+    base_eff = (batch.base[:, pidx] + adder + batch.chip_offsets[:, chip]
+                + jnp.take(batch.sub_offsets, sub_idx, axis=1))
+    return jnp.stack([
+        base_eff, stress * batch.k_bl[:, pidx], stress * batch.k_wl[:, pidx],
+        stress * batch.k_mat[:, pidx], stress * batch.k_row[:, pidx],
+        jnp.full_like(base_eff, t_op), batch.sigma, batch.outlier_rate,
+        batch.outlier_ns,
+    ], axis=1).astype(jnp.float32)
+
+
+def fail_prob_grids(batch: DimmBatch, param: str, t_op: float, *,
+                    temp_C: float = 85.0, refresh_ms: float = 64.0,
+                    pattern: str = "0101", chip: int = 0,
+                    subarray: int = 0) -> jnp.ndarray:
+    """(D, mats, rows, cols) failure-probability grids for every DIMM — the
+    batched sibling of ``DimmModel.fail_prob_grid``, computed by the Pallas
+    kernel (or its jnp oracle under REPRO_FORCE_REF)."""
+    from repro.kernels import ops
+    pidx = PARAMS.index(param)
+    adder = condition_adders(batch, temp_C, refresh_ms)
+    stress = np.float32(PATTERN_STRESS[pattern])
+    coeffs = _pack_coeffs(batch, pidx, np.float32(t_op), stress,
+                          jnp.asarray(adder), chip, subarray)
+    row_src = batch.row_src[:, subarray]
+    _, d_mat, _ = _geom_consts(batch.geom)
+    fp = functools.partial(ops.fail_prob, cols=batch.geom.cols_per_mat)
+    return jax.vmap(fp, in_axes=(0, None, 0))(row_src, jnp.asarray(d_mat),
+                                              coeffs)
+
+
+@functools.partial(jax.jit, static_argnames=("pidx", "iters", "internal"))
+def _row_lambda_jit(batch: DimmBatch, t_op, stress, adder, *,
+                    pidx: int, iters: int, internal: bool):
+    from repro.kernels import ops
+    g = batch.geom
+    S, P = g.subarrays, stress.shape[0]
+    _, d_mat, _ = _geom_consts(g)
+    d_mat = jnp.asarray(d_mat)
+    fp = functools.partial(ops.fail_prob, cols=g.cols_per_mat)
+    fp_d = jax.vmap(fp, in_axes=(0, None, 0))            # over DIMMs
+
+    def per_subarray(_, s):
+        def per_pattern(acc_p, pi):
+            coeffs = _pack_coeffs(batch, pidx, t_op, stress[pi], adder, 0, s)
+            grids = fp_d(jnp.take(batch.row_src, s, axis=1), d_mat, coeffs)
+            return acc_p + 2 * grids.sum(axis=(1, 3)) * g.chips, None
+        D, R = batch.serial.shape[0], g.rows_per_mat
+        exp_row, _ = jax.lax.scan(per_pattern, jnp.zeros((D, R), jnp.float32),
+                                  jnp.arange(P))
+        return None, exp_row * iters                     # (D, R) per subarray
+
+    _, lam = jax.lax.scan(per_subarray, None, jnp.arange(S))  # (S, D, R)
+    lam = jnp.moveaxis(lam, 0, 1)                        # (D, S, R)
+    if not internal:
+        # counts are produced in internal order then scattered to external
+        # addressing: ext_counts[j] = counts[ext_to_int[j]]
+        lam = jnp.take_along_axis(lam, batch.ext_to_int[:, None, :]
+                                  .repeat(lam.shape[1], axis=1), axis=2)
+    return lam.reshape(lam.shape[0], -1)
+
+
+def row_error_lambda(batch: DimmBatch, param: str, t_op: float, *,
+                     temp_C: float = 85.0, refresh_ms: float = 64.0,
+                     patterns=DEFAULT_PATTERNS, iters: int = DEFAULT_ITERS,
+                     internal_order: bool = False) -> np.ndarray:
+    """(D, subarrays*rows) expected error counts per row address for every
+    DIMM — the population-scale ``row_error_counts(sample=False)``."""
+    adder = condition_adders(batch, temp_C, refresh_ms)
+    out = _row_lambda_jit(batch, np.float32(t_op),
+                          jnp.asarray(pattern_stress(patterns)),
+                          jnp.asarray(adder), pidx=PARAMS.index(param),
+                          iters=iters, internal=internal_order)
+    return np.asarray(out)

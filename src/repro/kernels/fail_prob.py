@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: per-cell failure-probability grid (the DIVA model eval).
+
+One program owns one mat's (rows, cols) slab and evaluates the whole latency
+model in VMEM: distance-derived t_req (bitline / wordline / mat-position /
+row-index terms, Figs 3-4/9), the operating-condition and chip/subarray
+offsets (folded into the coefficient row), the heavy-tail weak-cell mixture
+(Sec 6.1/App C), and the post-manufacturing row repair (resolved upstream
+into the ``row_src`` index table).  HBM traffic is one read of the row-source
+and coefficient rows and one write of the (mats, rows, cols) grid.
+
+The call is vmap-able over DIMMs / chips / subarrays / patterns — the
+batching rule adds grid dimensions — which is how core/substrate.py profiles
+the whole population.  Semantics match ``kernels/ref.py::fail_prob`` to one
+float32 ulp (same jnp ops; XLA fuses the two programs differently) and
+``DimmModel.fail_prob_grid`` to float32 rounding of the folded coefficients.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.latency import fail_mixture
+
+N_COEFFS = 9  # base_eff, k_bl', k_wl', k_mat', k_row', t_op, sigma, rate, ns
+
+
+def cell_probs(rf, colf, even, d_mat, cf, n_rows: int, n_cols: int,
+               open_bitline: bool = True):
+    """Failure probability of each cell; shared by the kernel and the oracle.
+
+    ``rf``/``colf``/``even`` broadcast to the (rows, cols) slab; ``cf`` is the
+    folded 9-coefficient row (stress pre-multiplied into the k's, all
+    additive offsets folded into cf[0]).
+    """
+    if open_bitline:
+        d_bl = jnp.where(even, rf, (n_rows - 1.0) - rf) / (n_rows - 1.0)
+    else:
+        d_bl = rf / (n_rows - 1.0)
+    d_wl = colf / (n_cols - 1.0)
+    d_row = rf / (n_rows - 1.0)
+    t = cf[0] + cf[1] * d_bl + cf[2] * d_wl + cf[3] * d_mat + cf[4] * d_row
+    return fail_mixture(t, cf[5], cf[6], cf[7], cf[8], xp=jnp)
+
+
+def _make_kernel(n_rows: int, n_cols: int, open_bitline: bool):
+    def kernel(rs_ref, dm_ref, cf_ref, out_ref):
+        rows = rs_ref[...].astype(jnp.float32)            # (R, 1)
+        cf = cf_ref[...]                                  # (1, N_COEFFS)
+        rf = jnp.broadcast_to(rows, (n_rows, n_cols))
+        colf = jax.lax.broadcasted_iota(jnp.float32, (n_rows, n_cols), 1)
+        even = (jax.lax.broadcasted_iota(jnp.int32, (n_rows, n_cols), 1)
+                % 2) == 0
+        p = cell_probs(rf, colf, even, dm_ref[0, 0], cf[0], n_rows, n_cols,
+                       open_bitline)
+        out_ref[...] = p[None]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("cols", "open_bitline",
+                                             "interpret"))
+def fail_prob(row_src, d_mat, coeffs, *, cols: int, open_bitline: bool = True,
+              interpret: bool = True):
+    """row_src: (R,) int32 repair-resolved internal rows; d_mat: (M,) f32
+    precharge-arrival delays; coeffs: (N_COEFFS,) f32 folded coefficient row.
+    Returns the (M, R, C) failure-probability grid."""
+    row_src = jnp.asarray(row_src, jnp.int32).reshape(-1, 1)
+    d_mat = jnp.asarray(d_mat, jnp.float32).reshape(-1, 1)
+    coeffs = jnp.asarray(coeffs, jnp.float32).reshape(1, N_COEFFS)
+    R, M = row_src.shape[0], d_mat.shape[0]
+    kern = _make_kernel(R, cols, open_bitline)
+    return pl.pallas_call(
+        kern,
+        grid=(M,),
+        in_specs=[pl.BlockSpec((R, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (i, 0)),
+                  pl.BlockSpec((1, N_COEFFS), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, R, cols), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, R, cols), jnp.float32),
+        interpret=interpret,
+    )(row_src, d_mat, coeffs)

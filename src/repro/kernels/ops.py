@@ -12,6 +12,7 @@ import os
 import jax
 
 from repro.kernels import ref as _ref
+from repro.kernels.fail_prob import fail_prob as _fp_pallas
 from repro.kernels.rc_transient import rc_transient as _rc_pallas
 from repro.kernels.secded import encode_checks as _enc_pallas
 from repro.kernels.secded import syndrome as _syn_pallas
@@ -37,6 +38,14 @@ def secded_syndrome(code_bits):
     if not use_pallas():
         return _ref.secded_syndrome(code_bits)
     return _syn_pallas(code_bits, interpret=interpret_mode())
+
+
+def fail_prob(row_src, d_mat, coeffs, *, cols: int, open_bitline: bool = True):
+    if not use_pallas():
+        return _ref.fail_prob(row_src, d_mat, coeffs, cols=cols,
+                              open_bitline=open_bitline)
+    return _fp_pallas(row_src, d_mat, coeffs, cols=cols,
+                      open_bitline=open_bitline, interpret=interpret_mode())
 
 
 def diva_shuffle(bursts, inverse: bool = False):

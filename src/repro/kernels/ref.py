@@ -1,6 +1,7 @@
 """Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -8,6 +9,23 @@ from repro.core import ecc as _ecc
 from repro.core import spice as _spice
 from repro.kernels import shuffle as _shuffle_mod
 from repro.models.rwkv6 import wkv6_scan as _wkv6_scan
+
+
+def fail_prob(row_src, d_mat, coeffs, *, cols: int, open_bitline: bool = True):
+    """(M, R, C) failure-probability grid — pure-jnp oracle of the Pallas
+    kernel in kernels/fail_prob.py (same formula helper, same bits)."""
+    from repro.kernels.fail_prob import cell_probs
+    row_src = jnp.asarray(row_src, jnp.int32)
+    d_mat = jnp.asarray(d_mat, jnp.float32)
+    coeffs = jnp.asarray(coeffs, jnp.float32)
+    R = row_src.shape[0]
+    rf = jnp.broadcast_to(row_src.astype(jnp.float32)[None, :, None],
+                          (d_mat.shape[0], R, cols))
+    colf = jax.lax.broadcasted_iota(jnp.float32, (d_mat.shape[0], R, cols), 2)
+    even = (jax.lax.broadcasted_iota(jnp.int32, (d_mat.shape[0], R, cols), 2)
+            % 2) == 0
+    return cell_probs(rf, colf, even, d_mat[:, None, None], coeffs, R, cols,
+                      open_bitline)
 
 
 def secded_encode(data_bits):

@@ -7,15 +7,15 @@ from __future__ import annotations
 
 import jax
 
+from repro.sharding import mesh_axis_types_kw
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **mesh_axis_types_kw(len(axes)))
 
 
 def make_host_mesh():
     """A 1x1 mesh for CPU smoke runs (examples/tests)."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((1, 1), ("data", "model"), **mesh_axis_types_kw(2))

@@ -1,6 +1,6 @@
 """GQA attention: full, blockwise (flash-style online softmax), and decode.
 
-Baseline sharding notes (see DESIGN.md section 6): query heads are sharded on
+Baseline sharding notes (see ARCHITECTURE.md): query heads are sharded on
 the "model" mesh axis; KV heads are replicated within a GQA group. The
 blockwise path keeps the (Sq, Skv) score matrix from materialising for 32k+
 prefill; by default it is a ``lax.scan`` over KV chunks, but the dry-run

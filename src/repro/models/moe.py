@@ -193,11 +193,11 @@ def _moe_ffn_a2a(cfg: ModelConfig, p, x, mesh):
         aux = jax.lax.pmean(aux, "model")
         return out, aux
 
-    out, aux = jax.shard_map(
-        body, mesh=mesh,
+    from repro.sharding import shard_map
+    out, aux = shard_map(
+        body, mesh,
         in_specs=(x_spec, P(None, None), we_spec, we_spec, weo_spec),
         out_specs=(x_spec, P()),
-        check_vma=False,
     )(x, p["wr"], p["wei"], p["weg"], p["weo"])
     return out, aux
 
@@ -242,11 +242,10 @@ def _moe_ffn_ep(cfg: ModelConfig, p, x, mesh):
             aux = jax.lax.pmean(aux, b_names)
         return out.reshape(Bl, Sl, D), aux
 
-    out, aux = jax.shard_map(
-        body,
-        mesh=mesh,
+    from repro.sharding import shard_map
+    out, aux = shard_map(
+        body, mesh,
         in_specs=(x_spec, wr_spec, we_spec, we_spec, weo_spec),
         out_specs=(x_spec, P()),
-        check_vma=False,
     )(x, p["wr"], p["wei"], p["weg"], p["weo"])
     return out, aux

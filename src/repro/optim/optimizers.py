@@ -6,7 +6,7 @@ outside the optimizer state (simpler sharding / checkpointing).
 
 Adafactor (factored second moment, optional momentum-free operation) exists
 because the biggest assigned archs (kimi-k2 ~1.03T params, jamba ~398B) cannot
-hold AdamW fp32 state in one 256-chip v5e pod (see DESIGN.md section 4).
+hold AdamW fp32 state in one 256-chip v5e pod.
 """
 from __future__ import annotations
 

@@ -24,5 +24,5 @@ def plan_elastic_mesh(n_devices: int, *, model_parallel: int = 16,
 
 def make_elastic_mesh(n_devices: int, *, model_parallel: int = 16):
     shape, names = plan_elastic_mesh(n_devices, model_parallel=model_parallel)
-    return jax.make_mesh(shape, names,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    from repro.sharding import mesh_axis_types_kw
+    return jax.make_mesh(shape, names, **mesh_axis_types_kw(len(names)))

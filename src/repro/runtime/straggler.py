@@ -1,4 +1,4 @@
-"""DIVA-style canary probing for straggler detection (DESIGN.md section 2.2).
+"""DIVA-style canary probing for straggler detection (see ARCHITECTURE.md).
 
 The paper's argument transplanted: the slowest path in a TPU pod-of-pods is
 *design-induced* — the cross-pod ICI hop plus the largest per-step collective

@@ -1,6 +1,9 @@
 """Property tests (hypothesis) for SECDED(72,64) and DIVA Shuffling."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed; "
+                    "property tests skipped")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ecc, shuffling

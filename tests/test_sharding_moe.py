@@ -3,9 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import sharding as shd
+from repro.sharding import abstract_mesh
 from repro.configs.registry import get_config, get_smoke_config
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_host_mesh
@@ -16,7 +17,7 @@ from repro.models.moe import expert_capacity, moe_ffn, moe_params
 def _mesh(multi=False):
     shape = (2, 16, 16) if multi else (16, 16)
     names = ("pod", "data", "model") if multi else ("data", "model")
-    return AbstractMesh(shape, names)
+    return abstract_mesh(shape, names)
 
 
 @pytest.mark.parametrize("arch", ["kimi-k2-1t-a32b", "jamba-1.5-large-398b",
