@@ -147,25 +147,42 @@ def fig14_population():
 
 
 def fig17_shuffling():
-    """Correctable-error fraction with/without DIVA Shuffling (72 DIMM-configs)."""
+    """Correctable-error fraction with/without DIVA Shuffling (72 DIMM-configs,
+    one jitted ``shuffling_gain_population`` call for all trials)."""
     def run():
-        rng = np.random.default_rng(7)
-        gains, f_ns, f_s = [], [], []
-        for trial in range(72):
-            prob = np.full((9, 64), 2e-5)
-            # design-vulnerable burst positions shared across chips
-            start = rng.integers(0, 56)
-            width = rng.integers(4, 12)
-            level = rng.uniform(0.005, 0.04)
-            prob[:, start:start + width] = level
-            g = shuffling.shuffling_gain(prob, n_accesses=400, seed=int(trial))
-            gains.append(g["gain"])
-            f_ns.append(g["frac_no_shuffle"])
-            f_s.append(g["frac_shuffle"])
-        return {"mean_gain": round(float(np.mean(gains)), 3),
-                "mean_frac_no_shuffle": round(float(np.mean(f_ns)), 3),
-                "mean_frac_shuffle": round(float(np.mean(f_s)), 3),
+        from repro.core.substrate import shuffling_gain_population
+        # design-vulnerable burst positions shared across chips
+        probs = shuffling.design_stripe_profiles(72, seed=7)
+        g = shuffling_gain_population(probs, seeds=np.arange(72),
+                                      n_accesses=400)
+        return {"mean_gain": round(float(np.mean(g["gain"])), 3),
+                "mean_frac_no_shuffle": round(float(np.mean(g["frac_no_shuffle"])), 3),
+                "mean_frac_shuffle": round(float(np.mean(g["frac_shuffle"])), 3),
+                "undetected_words": int(g["undetected_no_shuffle"].sum()),
                 "paper": "+26% of errors become correctable on average"}
+    return _timed(run)
+
+
+def fig17_shuffling_population():
+    """Fig 17 on *profiled* DIMMs: burst-bit error profiles from the batched
+    substrate (Fig 12 layout), shuffling gain for the whole population in one
+    jitted call."""
+    def run():
+        from repro.core.substrate import (DimmBatch,
+                                          burst_bit_profile_population,
+                                          shuffling_gain_population)
+        pop = make_population(SMALL, 24)
+        batch = DimmBatch.from_population(pop)
+        probs = burst_bit_profile_population(batch, "trp", 7.5,
+                                             refresh_ms=256.0)
+        g = shuffling_gain_population(probs, seeds=batch.serial,
+                                      n_accesses=400)
+        active = g["total"] > 0
+        mean = lambda v: float(np.mean(v[active])) if active.any() else 0.0
+        return {"n_dimms": 24, "n_with_errors": int(active.sum()),
+                "mean_gain": round(mean(g["gain"]), 3),
+                "mean_frac_shuffle": round(mean(g["frac_shuffle"]), 3),
+                "paper": "92.5% of SECDED-uncorrectable errors recovered"}
     return _timed(run)
 
 
@@ -188,18 +205,38 @@ def fig18_latency_reduction():
 
 
 def fig19_performance():
-    """System performance with DIVA timings (Ramulator-lite)."""
+    """System performance with DIVA timings (Ramulator-lite; the base/new
+    workload grid is one jitted device call per core count)."""
     def run():
         d = DimmModel(SMALL, vendor_models(SMALL)["A"], serial=0)
         tp = diva_profile(d, temp_C=85.0)
         out = {}
+        ipcs = ramlite.evaluate_system_grid([STANDARD, tp], n_requests=6000)
         for cores in (1, 2, 4, 8):
-            s = ramlite.speedup_summary(tp, STANDARD, cores=cores,
-                                        n_requests=6000)
+            s = ramlite.speedup_summary(tp, STANDARD, cores=cores, ipcs=ipcs)
             key = "mean_singlecore_speedup" if cores == 1 else "mean_weighted_speedup"
             out[f"speedup_{cores}core"] = round(s[key], 4)
         out["paper"] = "9.2%/14.7%/13.7%/13.8% for 1/2/4/8 cores @85C"
         return out
+    return _timed(run)
+
+
+def fig19_system():
+    """Per-DIMM system speedups for a profiled population: profile_population
+    feeds system_speedup_population — the (base + D) x workloads timing grid
+    simulates as ONE jitted device call."""
+    def run():
+        from repro.core.substrate import DimmBatch, profile_population
+        pop = make_population(SMALL, 16)
+        tps = profile_population(DimmBatch.from_population(pop), temp_C=85.0,
+                                 multibit_only=True)
+        s = ramlite.system_speedup_population(tps, STANDARD, n_requests=6000)
+        return {"n_dimms": 16,
+                "mean_speedup": round(s["mean_speedup"], 4),
+                "median_speedup": round(s["median_speedup"], 4),
+                "min_speedup": round(s["min_speedup"], 4),
+                "max_speedup": round(s["max_speedup"], 4),
+                "paper": "population-scale Fig 19: per-DIMM profiled speedups"}
     return _timed(run)
 
 
@@ -257,8 +294,10 @@ FIGURES = {
     "fig13_operating_conditions": fig13_operating_conditions,
     "fig14_population": fig14_population,
     "fig17_shuffling": fig17_shuffling,
+    "fig17_shuffling_population": fig17_shuffling_population,
     "fig18_latency_reduction": fig18_latency_reduction,
     "fig19_performance": fig19_performance,
+    "fig19_system": fig19_system,
     "appA_profiling_cost": appA_profiling_cost,
     "appB_spice": appB_spice,
     "table2_4_population_profile": table2_4_population_profile,

@@ -62,7 +62,15 @@ def decode(code_bits):
     """(N, 72) -> (data (N,64), status (N,)) with status:
     0 = clean, 1 = corrected single-bit, 2 = uncorrectable (DED)."""
     code_bits = jnp.asarray(code_bits, jnp.int32)
-    syn = syndrome(code_bits)                      # (N, 8)
+    return decode_given_syndrome(code_bits, syndrome(code_bits))
+
+
+def decode_given_syndrome(code_bits, syn):
+    """Correction/classification from a precomputed (N, 8) syndrome — shared
+    by ``decode`` and the kernel-backed memsys codec (which computes the
+    syndrome on the Pallas path via ``kernels.ops.secded_syndrome``)."""
+    code_bits = jnp.asarray(code_bits, jnp.int32)
+    syn = jnp.asarray(syn, jnp.int32)
     syn_val = (syn * jnp.asarray(_POW2)).sum(-1)   # (N,)
     pos = jnp.asarray(_SYN_TO_POS)[syn_val]        # (N,) -1 if not single
     clean = syn_val == 0

@@ -58,19 +58,46 @@ def correctable_stats(chip_errors: np.ndarray, shuffle: bool) -> dict:
             "uncorrectable_words": int((per_cw > 1).sum())}
 
 
-def sample_chip_errors(bit_error_prob: np.ndarray, rng: np.random.Generator,
+def design_stripe_profiles(n_dimms: int, *, seed: int = 11,
+                           base: float = 2e-5) -> np.ndarray:
+    """(n_dimms, 9, 64) Fig 17-style synthetic burst-bit error profiles: per
+    DIMM, one design-vulnerable stripe of burst positions (width 4-12, error
+    level 0.005-0.04) shared across all chips on a flat ``base`` floor — the
+    single recipe used by the fig17 benchmark, the kernel bench, and tests."""
+    rng = np.random.default_rng(seed)
+    probs = np.full((n_dimms, 9, 64), base, np.float32)
+    for d in range(n_dimms):
+        start = rng.integers(0, 56)
+        width = int(rng.integers(4, 12))
+        probs[d, :, start:start + width] = rng.uniform(0.005, 0.04)
+    return probs
+
+
+def sample_chip_errors(bit_error_prob: np.ndarray, seed: int,
                        n_accesses: int) -> np.ndarray:
     """bit_error_prob: (9, 64) per-bit error probability (from the DIMM's
-    burst-bit profile, Fig 12). Returns (n_accesses, 9, 64) 0/1."""
-    return (rng.random((n_accesses, 9, 64)) < bit_error_prob[None]).astype(np.int32)
+    burst-bit profile, Fig 12). Returns (n_accesses, 9, 64) 0/1.
+
+    Draws come from the counter hash ``substrate.burst_uniform`` keyed on
+    (seed, access, lane), so this NumPy path and the jitted
+    ``substrate.shuffling_gain_population`` sample literally identical bits.
+    """
+    from repro.core.substrate import burst_uniform
+    acc = np.arange(n_accesses, dtype=np.uint32)[:, None]
+    lane = np.arange(9 * 64, dtype=np.uint32)[None, :]
+    u = burst_uniform(np.full((1, 1), seed, np.uint32), acc, lane)
+    errs = u < np.asarray(bit_error_prob, np.float32).reshape(1, 9 * 64)
+    return errs.astype(np.int32).reshape(n_accesses, 9, 64)
 
 
-def shuffling_gain(bit_error_prob: np.ndarray, *, n_accesses: int = 2000,
-                   seed: int = 0) -> dict:
-    """Fig 17 experiment: fraction of errors correctable with and without
-    DIVA Shuffling under SECDED, for one DIMM's burst-bit error profile."""
-    rng = np.random.default_rng(seed)
-    errs = sample_chip_errors(bit_error_prob, rng, n_accesses)
+def shuffling_gain_loop(bit_error_prob: np.ndarray, *, n_accesses: int = 2000,
+                        seed: int = 0) -> dict:
+    """Fig 17 experiment, per-access NumPy reference: fraction of errors
+    correctable with and without DIVA Shuffling under SECDED, for one DIMM's
+    burst-bit error profile.  The batched
+    ``substrate.shuffling_gain_population`` reproduces these counts exactly
+    (shared counter-hash draws)."""
+    errs = sample_chip_errors(bit_error_prob, seed, n_accesses)
     tot = corr_ns = corr_s = 0
     for e in errs:
         if not e.any():
@@ -86,3 +113,16 @@ def shuffling_gain(bit_error_prob: np.ndarray, *, n_accesses: int = 2000,
             "frac_no_shuffle": corr_ns / tot,
             "frac_shuffle": corr_s / tot,
             "gain": (corr_s - corr_ns) / tot}
+
+
+def shuffling_gain(bit_error_prob: np.ndarray, *, n_accesses: int = 2000,
+                   seed: int = 0) -> dict:
+    """Thin compatibility wrapper: one DIMM's Fig 17 gain via the jitted
+    population pipeline (the loop survives as ``shuffling_gain_loop``)."""
+    from repro.core.substrate import shuffling_gain_population
+    out = shuffling_gain_population(np.asarray(bit_error_prob)[None],
+                                    seeds=[seed], n_accesses=n_accesses)
+    return {"total": int(out["total"][0]),
+            "frac_no_shuffle": float(out["frac_no_shuffle"][0]),
+            "frac_shuffle": float(out["frac_shuffle"][0]),
+            "gain": float(out["gain"][0])}

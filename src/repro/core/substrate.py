@@ -85,6 +85,22 @@ def quantize_t(t_op) -> int:
     return int(round(float(t_op) * 4))
 
 
+def burst_uniform(seed, access, lane, xp=np):
+    """Deterministic uniform in [0, 1) for one (access, burst-lane) error draw
+    of the Fig 17 shuffling experiment — a sibling stream of ``query_uniform``
+    (distinct mixing constants, so it never collides with profiling draws).
+
+    Same bits from numpy (``shuffling.sample_chip_errors``) and jax
+    (``shuffling_gain_population``); pass arrays, not 0-d scalars, on the
+    numpy side.
+    """
+    u32 = lambda v: xp.asarray(v, xp.uint32)
+    h = u32(seed) * xp.uint32(_GOLD)
+    h = _mix32(h ^ (u32(access) * xp.uint32(0xB5297A4D)), xp)
+    h = _mix32(h ^ (u32(lane) * xp.uint32(0x68E31DA4)), xp)
+    return (h >> 8).astype(xp.float32) * xp.float32(1.0 / (1 << 24))
+
+
 # ------------------------------------------------------------- the batch
 
 _LEAVES = ("serial", "base", "k_bl", "k_wl", "k_mat", "k_row", "sigma",
@@ -417,3 +433,123 @@ def row_error_lambda(batch: DimmBatch, param: str, t_op: float, *,
                           jnp.asarray(adder), pidx=PARAMS.index(param),
                           iters=iters, internal=internal_order)
     return np.asarray(out)
+
+
+# ----------------------------------------------- batched DIVA Shuffling (Fig 17)
+
+N_LANES = 9 * 64  # chips x burst bits, the SECDED burst of core/shuffling.py
+
+
+@functools.partial(jax.jit, static_argnames=("n_accesses", "pallas"))
+def _shuffling_jit(probs, seeds, *, n_accesses: int, pallas: bool):
+    """The whole Fig 17 experiment as one program: sample (D, n, 9, 64) error
+    tensors with the counter-hash RNG, lay the lanes out per codeword with and
+    without DIVA Shuffling (kernels/shuffle permutation matmul), and score
+    every codeword (kernels/secded syndrome + error weight).
+
+    ``pallas`` is the dispatch mode resolved OUTSIDE the jit (REPRO_FORCE_REF)
+    — as a static arg it keys the cache, so toggling the env var between
+    same-shape calls retraces instead of silently reusing the other path.
+    """
+    from repro.kernels import ops
+    D = probs.shape[0]
+    acc = jnp.arange(n_accesses, dtype=jnp.uint32)
+    lane = jnp.arange(N_LANES, dtype=jnp.uint32)
+    u = burst_uniform(seeds[:, None, None], acc[None, :, None],
+                      lane[None, None, :], xp=jnp)          # (D, n, 576)
+    errs = (u < probs.reshape(D, 1, N_LANES)).astype(jnp.int32)
+    flat = errs.reshape(D * n_accesses, N_LANES)
+    if pallas:
+        # Interpret mode (CPU) pays per-grid-step overhead, so run each
+        # kernel as one full-array tile there; on TPU keep the VMEM-sized
+        # default tiles.
+        tile = flat.shape[0] if ops.interpret_mode() else None
+        shuffle_fn = functools.partial(ops.diva_shuffle, tile=tile)
+        syndrome_fn = functools.partial(
+            ops.secded_syndrome, tile=None if tile is None else 2 * 8 * tile)
+    else:
+        from repro.kernels import ref
+        shuffle_fn = ref.diva_shuffle
+        syndrome_fn = ref.secded_syndrome
+
+    # (beat, chip, dq) layout -> 8 codeword masks of 72 bits per access
+    masks_ns = shuffle_fn(flat, shuffle=False)
+    masks_s = shuffle_fn(flat, shuffle=True)
+    both = jnp.stack([masks_ns, masks_s]).reshape(2, D, n_accesses * 8, 72)
+    w = both.sum(axis=3)                                    # per-codeword weight
+    syn = syndrome_fn(both.reshape(-1, 72))
+    detected = jnp.any(syn.reshape(2, D, n_accesses * 8, 8) > 0, axis=3)
+    corrected = jnp.where(w == 1, w, 0).sum(axis=2)          # (2, D)
+    uncorrectable = (w > 1).sum(axis=2)
+    undetected = ((w > 1) & ~detected).sum(axis=2)           # silent corruption
+    total = errs.sum(axis=(1, 2))
+    return (total, corrected[0], corrected[1], uncorrectable[0],
+            uncorrectable[1], undetected[0], undetected[1])
+
+
+def shuffling_gain_population(bit_error_prob, *, seeds=None, seed: int = 0,
+                              n_accesses: int = 2000) -> dict:
+    """Fig 17 at population scale: per-DIMM correctable-error fractions with
+    and without DIVA Shuffling, for (D, 9, 64) burst-bit error profiles (from
+    ``burst_bit_profile_population`` or synthetic), in one jitted call.
+
+    ``seeds`` gives each DIMM its error-draw stream (default ``seed + i``);
+    on a singleton batch with the same seed this reproduces
+    ``shuffling.shuffling_gain_loop`` count-for-count (shared counter hash).
+    Beyond the loop's counts it reports uncorrectable and *undetected*
+    (syndrome-aliased multi-bit) codewords per mode via the SECDED syndrome
+    kernel.
+    """
+    probs = np.asarray(bit_error_prob, np.float32)
+    if probs.ndim == 2:
+        probs = probs[None]
+    assert probs.shape[1:] == (9, 64), probs.shape
+    D = probs.shape[0]
+    if seeds is None:
+        seeds = seed + np.arange(D)
+    seeds = np.asarray(seeds, np.uint32)
+    assert seeds.shape == (D,)
+    from repro.kernels import ops
+    out = _shuffling_jit(jnp.asarray(probs), jnp.asarray(seeds),
+                         n_accesses=n_accesses, pallas=ops.use_pallas())
+    total, c_ns, c_s, unc_ns, unc_s, und_ns, und_s = (
+        np.asarray(v, np.int64) for v in out)
+    denom = np.maximum(total, 1)
+    return {"total": total,
+            "frac_no_shuffle": np.where(total == 0, 1.0, c_ns / denom),
+            "frac_shuffle": np.where(total == 0, 1.0, c_s / denom),
+            "gain": np.where(total == 0, 0.0, (c_s - c_ns) / denom),
+            "uncorrectable_no_shuffle": unc_ns, "uncorrectable_shuffle": unc_s,
+            "undetected_no_shuffle": und_ns, "undetected_shuffle": und_s}
+
+
+def burst_bit_profile_population(batch: DimmBatch, param: str, t_op: float, *,
+                                 temp_C: float = 85.0, refresh_ms: float = 64.0,
+                                 pattern: str = "0101",
+                                 subarray: int = 0) -> np.ndarray:
+    """(D, 9, 64) per-access error probability per burst-bit position — the
+    population-scale Fig 12 profile feeding ``shuffling_gain_population``.
+
+    Bit j of chip c reads mat ``burst_bit_to_mat(j)`` at the bit's column
+    stride (the layout of ``DimmModel.burst_bit_error_counts``); its per-access
+    error probability is the row-average failure probability at that (mat,
+    col), from the same Pallas fail_prob grids as the profiling sweep.  The
+    ECC chip (row 8) shares the die design but has no per-chip offset in the
+    model, so it gets the across-data-chip mean profile.
+    """
+    from repro.core.geometry import burst_bit_to_mat
+    g = batch.geom
+    bits = np.arange(g.burst_bits)
+    mats = burst_bit_to_mat(g, bits)
+    within = bits % g.bits_per_mat_in_burst
+    cols = (within * (g.cols_per_mat // g.bits_per_mat_in_burst)
+            + g.cols_per_mat // (2 * g.bits_per_mat_in_burst))
+    out = np.zeros((batch.n_dimms, 9, g.burst_bits), np.float32)
+    for chip in range(g.chips):
+        grids = fail_prob_grids(batch, param, t_op, temp_C=temp_C,
+                                refresh_ms=refresh_ms, pattern=pattern,
+                                chip=chip, subarray=subarray)
+        # reduce on device: only (D, 64) floats cross to host per chip
+        out[:, chip, :] = np.asarray(jnp.mean(grids, axis=2)[:, mats, cols])
+    out[:, 8, :] = out[:, :g.chips, :].mean(axis=1)
+    return out

@@ -12,6 +12,7 @@ from dataclasses import dataclass
 
 CYCLE_NS = 1.25  # DDR3-1600 clock period
 TCL_NS = 13.75  # CAS latency, fixed (not swept by the paper)
+TCWL_NS = 10.0  # CAS write latency (DDR3-1600 CWL=8), fixed like tCL
 PARAMS = ("trcd", "tras", "trp", "twr")
 
 

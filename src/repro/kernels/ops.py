@@ -34,10 +34,11 @@ def secded_encode(data_bits):
     return _enc_pallas(data_bits, interpret=interpret_mode())
 
 
-def secded_syndrome(code_bits):
+def secded_syndrome(code_bits, tile: int | None = None):
     if not use_pallas():
         return _ref.secded_syndrome(code_bits)
-    return _syn_pallas(code_bits, interpret=interpret_mode())
+    kw = {} if tile is None else {"tile": tile}
+    return _syn_pallas(code_bits, interpret=interpret_mode(), **kw)
 
 
 def fail_prob(row_src, d_mat, coeffs, *, cols: int, open_bitline: bool = True):
@@ -48,10 +49,13 @@ def fail_prob(row_src, d_mat, coeffs, *, cols: int, open_bitline: bool = True):
                       open_bitline=open_bitline, interpret=interpret_mode())
 
 
-def diva_shuffle(bursts, inverse: bool = False):
+def diva_shuffle(bursts, inverse: bool = False, shuffle: bool = True,
+                 perm=None, tile: int | None = None):
     if not use_pallas():
-        return _ref.diva_shuffle(bursts, inverse)
-    return _shuf_pallas(bursts, inverse=inverse, interpret=interpret_mode())
+        return _ref.diva_shuffle(bursts, inverse, shuffle=shuffle, perm=perm)
+    kw = {} if tile is None else {"tile": tile}
+    return _shuf_pallas(bursts, inverse=inverse, shuffle=shuffle, perm=perm,
+                        interpret=interpret_mode(), **kw)
 
 
 def rc_transient(row_frac, col_frac, **kw):

@@ -38,8 +38,11 @@ def secded_syndrome(code_bits):
     return _ecc.syndrome(code_bits)
 
 
-def diva_shuffle(bursts, inverse: bool = False):
-    perm = _shuffle_mod.shuffle_permutation()
+def diva_shuffle(bursts, inverse: bool = False, shuffle: bool = True,
+                 perm: np.ndarray | None = None):
+    if perm is None:
+        perm = _shuffle_mod.shuffle_permutation(shuffle)
+    perm = np.asarray(perm, np.int32)
     bursts = jnp.asarray(bursts, jnp.int32)
     if inverse:
         inv = np.zeros_like(perm)

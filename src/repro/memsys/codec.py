@@ -12,17 +12,37 @@ interleaving: stored bit l belongs to codeword l % 8, so a contiguous run of
 up to 8 flipped bits puts at most ONE error in each codeword — fully
 correctable. (core/shuffling.py models the paper's original chip-rotation
 variant for the DRAM burst experiments of Fig 17.)
+
+The bit path runs on the kernel layer (kernels/ops.py dispatch, so
+REPRO_FORCE_REF=1 / interpret mode apply): check bits via the SECDED encode
+kernel, the interleave as a 576-lane permutation through the shuffle
+permutation-matmul kernel, and decode classification from the syndrome
+kernel via ``ecc.decode_given_syndrome``.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core import ecc
+from repro.kernels import ops
 
 BURST_WORDS = 8          # codewords per interleaved burst
 BURST_LANES = BURST_WORDS * ecc.CODE_BITS  # 576 bit lanes
+
+
+@functools.lru_cache(maxsize=1)
+def interleave_permutation() -> np.ndarray:
+    """perm[l] = source index (codeword-major w*72+pos) of stored lane l,
+    with l = pos*8 + w — the round-robin spread across the burst's 8
+    codewords (the codec's analogue of kernels/shuffle.shuffle_permutation)."""
+    w, pos = np.meshgrid(np.arange(BURST_WORDS), np.arange(ecc.CODE_BITS),
+                         indexing="ij")
+    perm = np.zeros(BURST_LANES, np.int32)
+    perm[(pos * BURST_WORDS + w).ravel()] = (w * ecc.CODE_BITS + pos).ravel()
+    return perm
 
 
 @dataclass
@@ -38,27 +58,25 @@ class CodecStats:
 
 def protect_blob(data: bytes, *, shuffle: bool = True) -> np.ndarray:
     """bytes -> (G, 576) 0/1 int8 stored burst lanes."""
-    words = ecc.protect_bytes(data)              # (N, 9) data+check bytes
-    pad = (-len(words)) % BURST_WORDS
-    if pad:  # zero data -> zero checks: all-zero rows are valid codewords
-        words = np.concatenate([words, np.zeros((pad, 9), np.uint8)])
-    bits = np.unpackbits(words, axis=1, bitorder="little")  # (N, 72)
-    groups = bits.reshape(-1, BURST_WORDS, ecc.CODE_BITS)   # (G, w, pos)
-    if shuffle:  # stored lane l = pos*8 + w  (round-robin across codewords)
-        lanes = np.moveaxis(groups, 1, 2).reshape(-1, BURST_LANES)
-    else:        # codeword-major: lane l = w*72 + pos
-        lanes = groups.reshape(-1, BURST_LANES)
-    return lanes.astype(np.int8)
+    pad = (-len(data)) % (8 * BURST_WORDS)
+    arr = np.frombuffer(data + b"\0" * pad, np.uint8).reshape(-1, 8)
+    data_bits = ecc.bytes_to_bits(arr)                       # (N, 64)
+    checks = np.asarray(ops.secded_encode(data_bits))        # (N, 8) kernel
+    bits = np.concatenate([data_bits, checks], axis=1)       # (N, 72)
+    flat = bits.reshape(-1, BURST_LANES)                     # codeword-major
+    if shuffle:  # stored lane l = pos*8 + w (round-robin across codewords)
+        flat = np.asarray(ops.diva_shuffle(flat, perm=interleave_permutation()))
+    return flat.astype(np.int8)
 
 
 def recover_blob(lanes: np.ndarray, n_bytes: int, *, shuffle: bool = True) -> tuple[bytes, CodecStats]:
-    lanes = np.asarray(lanes, np.uint8)
+    lanes = np.asarray(lanes, np.int32)
     if shuffle:
-        groups = np.moveaxis(lanes.reshape(-1, ecc.CODE_BITS, BURST_WORDS), 2, 1)
-    else:
-        groups = lanes.reshape(-1, BURST_WORDS, ecc.CODE_BITS)
-    code = groups.reshape(-1, ecc.CODE_BITS)
-    fixed, status = ecc.decode(code.astype(np.int32))
+        lanes = np.asarray(ops.diva_shuffle(lanes, inverse=True,
+                                            perm=interleave_permutation()))
+    code = lanes.reshape(-1, ecc.CODE_BITS)
+    syn = ops.secded_syndrome(code)                          # kernel path
+    fixed, status = ecc.decode_given_syndrome(code, syn)
     by = ecc.bits_to_bytes(np.asarray(fixed)).reshape(-1)
     stats = CodecStats(codewords=len(code),
                        corrected=int((np.asarray(status) == 1).sum()),
