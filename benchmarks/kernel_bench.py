@@ -2,9 +2,11 @@
 tracking, not TPU performance — the roofline story lives in EXPERIMENTS.md).
 
 ``--smoke`` times the tentpoles: one jitted ``profile_population`` sweep over
-a DIMM population vs the legacy per-DIMM NumPy walker, and one jitted
-``shuffling_gain_population`` call vs the per-access ``shuffling_gain_loop``;
-CI asserts both stay >= 5x on CPU with bit-identical results.
+a DIMM population vs the legacy per-DIMM NumPy walker, one jitted
+``shuffling_gain_population`` call vs the per-access ``shuffling_gain_loop``,
+and one jitted ``lifetime_population`` epoch scan vs the per-DIMM Python
+lifecycle ``lifetime_loop``; CI asserts all three stay >= 5x on CPU with
+bit-identical results.
 
     PYTHONPATH=src python benchmarks/kernel_bench.py --smoke
 """
@@ -126,6 +128,45 @@ def shuffling_gain_speedup(n_dimms: int = 8, n_accesses: int = 400,
             "results_match": match}
 
 
+def lifetime_speedup(n_dimms: int = 4, n_epochs: int = 3,
+                     iters: int = 1) -> dict:
+    """Wall-clock: one jitted lifetime scan (all DIMMs x all epochs) vs the
+    per-DIMM Python lifecycle on the SAME aging/temperature schedule and the
+    SAME Monte-Carlo decisions (shared query hash) — identical work, pure
+    batching + the epoch lax.scan.
+    """
+    from repro.core.geometry import SMALL
+    from repro.core.population import make_population
+    from repro.core.profiling import lifetime_loop
+    from repro.core.substrate import DimmBatch, lifetime_population
+
+    pop = make_population(SMALL, n_dimms)
+    batch = DimmBatch.from_population(pop)
+    ages = np.linspace(0.0, 6.0, n_epochs).astype(np.float32)
+    temps = np.full(n_epochs, 55.0)
+
+    lifetime_population(batch, ages, temps)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = lifetime_population(batch, ages, temps)
+    t_batched = (time.time() - t0) / iters
+
+    t0 = time.time()
+    for _ in range(iters):
+        legacy = [lifetime_loop(d, ages, temps) for d in pop]
+    t_loop = (time.time() - t0) / iters
+
+    match = all(
+        np.array_equal(out["timings"][:, d], legacy[d]["timings"])
+        and np.array_equal(out["stale_fail"][:, d], legacy[d]["stale_fail"])
+        for d in range(n_dimms))
+    return {"n_dimms": n_dimms, "n_epochs": n_epochs,
+            "batched_ms": round(t_batched * 1e3, 1),
+            "legacy_loop_ms": round(t_loop * 1e3, 1),
+            "speedup": round(t_loop / max(t_batched, 1e-9), 1),
+            "results_match": match}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -158,6 +199,16 @@ def main() -> None:
         sys.exit(f"FAIL: shuffling speedup {g['speedup']}x < 5x target")
     print(f"OK: shuffling_gain_population {g['speedup']}x faster than the "
           f"per-access loop on {g['n_dimms']} DIMMs")
+    lt = lifetime_speedup()
+    for k, v in lt.items():
+        print(f"lifetime_{k},{v}")
+    if not lt["results_match"]:
+        sys.exit("FAIL: jitted lifetime scan != per-DIMM Python lifecycle")
+    if lt["speedup"] < 5.0:
+        sys.exit(f"FAIL: lifetime speedup {lt['speedup']}x < 5x target")
+    print(f"OK: lifetime_population {lt['speedup']}x faster than the "
+          f"Python lifecycle on {lt['n_dimms']} DIMMs x {lt['n_epochs']} "
+          f"epochs")
 
 
 if __name__ == "__main__":

@@ -146,6 +146,49 @@ def fig14_population():
     return _timed(run)
 
 
+def fig14_population_sharded():
+    """Fig 14's expensive lambda grids through the DIMM-axis device mesh
+    (sharding.dimm_mesh + shard_map): bit-identical to the single-device
+    route by the serial-keyed counter hash, so this reports the mesh size
+    and a parity check rather than new physics."""
+    def run():
+        from repro.core.substrate import DimmBatch, row_error_lambda
+        from repro.sharding import dimm_mesh
+        pop = make_population(SMALL, 24)
+        batch = DimmBatch.from_population(pop)
+        mesh = dimm_mesh()
+        lam = row_error_lambda(batch, "trp", 7.5, refresh_ms=256.0, mesh=mesh)
+        ref = row_error_lambda(batch, "trp", 7.5, refresh_ms=256.0)
+        vrs = [vulnerability_ratio(
+            d.sample_row_counts(lam[i], "trp", 7.5, refresh_ms=256.0))
+            for i, d in enumerate(pop)]
+        return {"n_dimms": 24, "n_devices": int(mesh.devices.size),
+                "sharded_bit_identical": bool(np.array_equal(lam, ref)),
+                "vr_median": round(float(np.median(vrs)), 1),
+                "paper": "Fig 14 at population scale, DIMM axis sharded"}
+    return _timed(run)
+
+
+def fig17_shuffling_sharded():
+    """Fig 17 through the device mesh: the whole trial population sharded
+    over the DIMM axis, count-identical to the single-device route."""
+    def run():
+        from repro.core.substrate import shuffling_gain_population
+        from repro.sharding import dimm_mesh
+        probs = shuffling.design_stripe_profiles(72, seed=7)
+        mesh = dimm_mesh()
+        g = shuffling_gain_population(probs, seeds=np.arange(72),
+                                      n_accesses=400, mesh=mesh)
+        ref = shuffling_gain_population(probs, seeds=np.arange(72),
+                                        n_accesses=400)
+        return {"n_devices": int(mesh.devices.size),
+                "sharded_bit_identical": bool(all(
+                    np.array_equal(g[k], ref[k]) for k in g)),
+                "mean_gain": round(float(np.mean(g["gain"])), 3),
+                "paper": "+26% of errors become correctable on average"}
+    return _timed(run)
+
+
 def fig17_shuffling():
     """Correctable-error fraction with/without DIVA Shuffling (72 DIMM-configs,
     one jitted ``shuffling_gain_population`` call for all trials)."""
@@ -201,6 +244,36 @@ def fig18_latency_reduction():
         out["aldram_read_55C"] = round(lr["read_reduction"], 3)
         out["paper"] = "DIVA 35.1%/57.8% read/write @55C; AL-DRAM 33.0%/55.2%"
         return out
+    return _timed(run)
+
+
+def fig_lifetime():
+    """Sec 6.1 fn 2 as a figure: a decade of aging drift across the
+    population, profiled as ONE jitted epoch scan (lifetime_population).
+    DIVA's periodic re-profiling walks the timings up with t_req while the
+    previous-epoch tables (what a static AL-DRAM-style table degenerates to)
+    start failing the region test."""
+    def run():
+        from repro.core.substrate import DimmBatch, lifetime_population
+        from repro.core.timing import PARAMS
+        pop = make_population(SMALL, 16)
+        ages = np.linspace(0.0, 10.0, 6).astype(np.float32)
+        out = lifetime_population(DimmBatch.from_population(pop), ages,
+                                  np.full(len(ages), 55.0))
+        t = out["timings"]                    # (E, D, 4)
+        read0 = t[0, :, :3].sum(axis=1)       # tRCD + tRAS + tRP
+        readN = t[-1, :, :3].sum(axis=1)
+        drift = {p: round(float(t[-1, :, i].mean() - t[0, :, i].mean()), 3)
+                 for i, p in enumerate(PARAMS)}
+        return {"n_dimms": 16, "n_epochs": len(ages),
+                "read_ns_mean_age0": round(float(read0.mean()), 2),
+                "read_ns_mean_age10": round(float(readN.mean()), 2),
+                **{f"drift_{p}_ns": v for p, v in drift.items()},
+                "stale_epochs_total": int(out["stale_fail"].sum()),
+                "mean_ecc_lambda_age10": round(
+                    float(out["ecc_lambda"][-1].mean()), 5),
+                "paper": "static tables go stale (Sec 6.1 fn 2); "
+                         "online DIVA follows the drift"}
     return _timed(run)
 
 
@@ -293,9 +366,12 @@ FIGURES = {
     "fig12_burst_bits": fig12_burst_bits,
     "fig13_operating_conditions": fig13_operating_conditions,
     "fig14_population": fig14_population,
+    "fig14_population_sharded": fig14_population_sharded,
     "fig17_shuffling": fig17_shuffling,
     "fig17_shuffling_population": fig17_shuffling_population,
+    "fig17_shuffling_sharded": fig17_shuffling_sharded,
     "fig18_latency_reduction": fig18_latency_reduction,
+    "fig_lifetime": fig_lifetime,
     "fig19_performance": fig19_performance,
     "fig19_system": fig19_system,
     "appA_profiling_cost": appA_profiling_cost,

@@ -4,5 +4,8 @@ from repro.core.geometry import DimmGeometry, FULL, SMALL, TINY, RowScramble
 from repro.core.latency import VendorModel, vendor_models, t_req_grid, fail_probability
 from repro.core.errors import DimmModel, vulnerability_ratio
 from repro.core.profiling import (ALDRAM, DivaProfiler, conventional_profile,
-                                  diva_profile, latency_reduction, profiling_time_s)
+                                  diva_profile, latency_reduction, lifetime_loop,
+                                  profiling_time_s)
+from repro.core.substrate import (DimmBatch, lifetime_population,
+                                  profile_population, shuffling_gain_population)
 from repro.core import ecc, shuffling, spice, ramlite

@@ -190,26 +190,12 @@ class DimmModel:
     def total_errors(self, param: str, t_op: float, **kw) -> int:
         return int(self.row_error_counts(param, t_op, **kw).sum())
 
-    def region_has_errors(self, param: str, t_op: float, internal_rows,
-                          *, temp_C=85.0, refresh_ms=64.0,
-                          patterns=DEFAULT_PATTERNS, iters=DEFAULT_ITERS,
-                          multibit_only: bool = False) -> bool:
-        """Monte-Carlo test of a row subset (used by profiling).
-
-        ``multibit_only=True`` is the DIVA+ECC criterion (Sec 6.1): the
-        profiled timing must produce no MULTI-bit errors per 72-bit codeword;
-        random single-bit failures are SECDED-correctable and tolerated.
-
-        The accept/reject draw is ``u < P(N_errors > 0)`` with ``u`` from the
-        per-query counter hash shared with core/substrate.py — deterministic,
-        and bit-identical between this walker and ``profile_population``.
-        """
-        S, P = self.geom.subarrays, len(patterns)
-        u = query_uniform(np.full((S, P), self.serial, np.uint32),
-                          PARAMS.index(param), quantize_t(t_op),
-                          int(multibit_only), np.arange(S)[:, None],
-                          np.arange(P)[None, :])
-        for sub in range(S):
+    def _region_lam_iter(self, param, t_op, internal_rows, *, temp_C,
+                         refresh_ms, patterns, iters, multibit_only):
+        """Lazily yield (sub, pat_idx, lam): the per-(subarray, pattern)
+        expected failure counts of the region test, computed one grid at a
+        time so callers can stop at the first tripped draw."""
+        for sub in range(self.geom.subarrays):
             for pi, pat in enumerate(patterns):
                 p = self.fail_prob_grid(param, t_op, pattern=pat, subarray=sub,
                                         temp_C=temp_C, refresh_ms=refresh_ms)
@@ -223,8 +209,51 @@ class DimmModel:
                     p_multi = multibit_tail(region)
                     lam = np.maximum(
                         2 * iters * self.geom.chips * p_multi.sum() / 72.0, 0.0)
-                if u[sub, pi] < -np.expm1(-lam):
-                    return True
+                yield sub, pi, np.float32(lam)
+
+    def region_error_lambdas(self, param: str, t_op: float, internal_rows,
+                             *, temp_C=85.0, refresh_ms=64.0,
+                             patterns=DEFAULT_PATTERNS, iters=DEFAULT_ITERS,
+                             multibit_only: bool = False) -> np.ndarray:
+        """(subarrays, patterns) f32 expected failure counts of the region
+        test — the ``lam`` behind ``region_has_errors``'s accept/reject draws
+        and the ECC-exposure integrand of the lifetime lifecycle
+        (``profiling.lifetime_loop`` / ``substrate.lifetime_population``)."""
+        lams = np.zeros((self.geom.subarrays, len(patterns)), np.float32)
+        for sub, pi, lam in self._region_lam_iter(
+                param, t_op, internal_rows, temp_C=temp_C,
+                refresh_ms=refresh_ms, patterns=patterns, iters=iters,
+                multibit_only=multibit_only):
+            lams[sub, pi] = lam
+        return lams
+
+    def region_has_errors(self, param: str, t_op: float, internal_rows,
+                          *, temp_C=85.0, refresh_ms=64.0,
+                          patterns=DEFAULT_PATTERNS, iters=DEFAULT_ITERS,
+                          multibit_only: bool = False) -> bool:
+        """Monte-Carlo test of a row subset (used by profiling).
+
+        ``multibit_only=True`` is the DIVA+ECC criterion (Sec 6.1): the
+        profiled timing must produce no MULTI-bit errors per 72-bit codeword;
+        random single-bit failures are SECDED-correctable and tolerated.
+
+        The accept/reject draw is ``u < P(N_errors > 0)`` with ``u`` from the
+        per-query counter hash shared with core/substrate.py — deterministic,
+        and bit-identical between this walker and ``profile_population``.
+        Stops at the first tripped draw (per-query determinism makes the
+        early exit decision-neutral).
+        """
+        S, P = self.geom.subarrays, len(patterns)
+        u = query_uniform(np.full((S, P), self.serial, np.uint32),
+                          PARAMS.index(param), quantize_t(t_op),
+                          int(multibit_only), np.arange(S)[:, None],
+                          np.arange(P)[None, :])
+        for sub, pi, lam in self._region_lam_iter(
+                param, t_op, internal_rows, temp_C=temp_C,
+                refresh_ms=refresh_ms, patterns=patterns, iters=iters,
+                multibit_only=multibit_only):
+            if u[sub, pi] < -np.expm1(-lam):
+                return True
         return False
 
 

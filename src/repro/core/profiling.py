@@ -15,20 +15,24 @@ re-profiles, so aging drift eventually makes its table unsafe (Sec 6.1 fn 2)
 
 ``diva_profile`` / ``conventional_profile`` are thin compatibility wrappers:
 they build a single-DIMM ``DimmBatch`` and run the jitted population sweep in
-core/substrate.py.  The original NumPy walkers survive as
-``diva_profile_loop`` / ``conventional_profile_loop`` — the reference (and
-benchmark baseline) that ``profile_population`` reproduces exactly, decision
-for decision, via the shared per-query uniform hash.
+core/substrate.py; ``DivaProfiler`` and ``ALDRAM.install`` are likewise thin
+wrappers over the jitted lifetime scan (``substrate.lifetime_population``) —
+the profiler serves a precomputed per-epoch table, AL-DRAM's temperature bins
+are just epochs of a zero-aging schedule.  The original NumPy walkers survive
+as ``diva_profile_loop`` / ``conventional_profile_loop`` / ``lifetime_loop``
+— the references (and benchmark baselines) that the device programs reproduce
+exactly, decision for decision, via the shared per-query uniform hash.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.core.errors import DEFAULT_ITERS, DEFAULT_PATTERNS, DimmModel
 from repro.core.latency import worst_rows_internal
-from repro.core.substrate import DimmBatch, profile_population
+from repro.core.substrate import (DimmBatch, _resolve_rows,
+                                  lifetime_population, profile_population)
 from repro.core.timing import CYCLE_NS, PARAMS, STANDARD, TimingParams, timing_grid
 
 
@@ -89,11 +93,12 @@ def _min_safe(dimm: DimmModel, param: str, rows_internal, *, temp_C, refresh_ms,
 
 
 def _profile_loop(dimm: DimmModel, rows, *, temp_C, refresh_ms, guard_cycles,
-                  multibit_only: bool = False) -> TimingParams:
+                  multibit_only: bool = False, patterns=DEFAULT_PATTERNS,
+                  iters=DEFAULT_ITERS) -> TimingParams:
     """tRCD first; tRAS's sweep floor then tracks the reduced tRCD + 10 ns
     (the infrastructure constraint of Section 4)."""
     kw = dict(temp_C=temp_C, refresh_ms=refresh_ms, guard_cycles=guard_cycles,
-              multibit_only=multibit_only)
+              multibit_only=multibit_only, patterns=patterns, iters=iters)
     trcd = _min_safe(dimm, "trcd", rows, **kw)
     tras = _min_safe(dimm, "tras", rows, floor=trcd + 10.0, **kw)
     trp = _min_safe(dimm, "trp", rows, **kw)
@@ -116,22 +121,107 @@ def conventional_profile_loop(dimm: DimmModel, *, temp_C=55.0, refresh_ms=64.0,
                          refresh_ms=refresh_ms, guard_cycles=guard_cycles)
 
 
+def lifetime_loop(dimm: DimmModel, ages, temps, *, refresh_ms=64.0,
+                  region="worst", guard_cycles: int = 1, multibit: bool = True,
+                  patterns=DEFAULT_PATTERNS, iters=DEFAULT_ITERS) -> dict:
+    """The per-DIMM Python reference of ``substrate.lifetime_population``:
+    walk the profiling epochs serially, re-profiling under each epoch's
+    (age, temperature) with the legacy NumPy walker, testing whether the
+    previous epoch's table (the standard table at epoch 0) still passes, and
+    integrating the multi-bit ECC exposure at the fresh operating point.
+
+    Returns {"timings": (E, 4), "stale_fail": (E,), "ecc_lambda": (E,)} —
+    timings and stale decisions bit-identical to the jitted epoch scan via
+    the shared per-query hash.
+    """
+    rows = _resolve_rows(region, dimm.geom)  # same validation as the scan
+    ages = np.asarray(ages, np.float32)
+    temps = np.asarray(temps, np.float64)
+    E = len(ages)
+    timings = np.zeros((E, len(PARAMS)), np.float32)
+    stale = np.zeros(E, bool)
+    ecc = np.zeros(E, np.float32)
+    kw = dict(refresh_ms=refresh_ms, patterns=patterns, iters=iters)
+    prev, age0 = STANDARD, dimm.age_years
+    try:
+        for e in range(E):
+            dimm.age_years = float(ages[e])
+            temp = float(temps[e])
+            t_new = _profile_loop(dimm, rows, temp_C=temp,
+                                  refresh_ms=refresh_ms,
+                                  guard_cycles=guard_cycles,
+                                  multibit_only=multibit,
+                                  patterns=patterns, iters=iters)
+            stale[e] = any(
+                dimm.region_has_errors(p, getattr(prev, p), rows, temp_C=temp,
+                                       multibit_only=multibit, **kw)
+                for p in PARAMS)
+            ecc[e] = np.float32(sum(
+                dimm.region_error_lambdas(p, getattr(t_new, p), rows,
+                                          temp_C=temp, multibit_only=True,
+                                          **kw).sum()
+                for p in PARAMS))
+            timings[e] = [getattr(t_new, p) for p in PARAMS]
+            prev = t_new
+    finally:
+        dimm.age_years = age0
+    return {"timings": timings, "stale_fail": stale, "ecc_lambda": ecc}
+
+
 @dataclass
 class DivaProfiler:
-    """Online profiler: re-profiles periodically so aging drift is tracked."""
+    """Online profiler: re-profiles every ``period_steps`` accesses so aging
+    drift is tracked (Sec 6.1).  The whole re-profiling lifecycle — aging by
+    ``years_per_period`` per interval at the profiler's operating point — is
+    computed as ONE jitted device program (``substrate.lifetime_population``);
+    ``timing()`` just serves the current epoch's row of the precomputed
+    trajectory (the horizon doubles on demand, so retraces stay logarithmic
+    in lifetime length)."""
     dimm: DimmModel
     period_steps: int = 1000
     temp_C: float = 55.0
     refresh_ms: float = 64.0
-    _current: TimingParams | None = None
+    years_per_period: float = 0.0
+    _timings: np.ndarray | None = field(default=None, repr=False)
+    _age_base: float | None = field(default=None, repr=False)
+    _epoch_base: int = 0
+    _cur_epoch: int = field(default=-1, repr=False)
     _step: int = 0
 
+    def lifecycle(self, n_epochs: int, age_base: float | None = None,
+                  diagnostics: bool = False) -> dict:
+        """The profiler's full epoch schedule through the jitted scan.
+        ``timing()`` runs it timing-only; pass ``diagnostics=True`` for the
+        stale/ECC trajectories."""
+        base = self.dimm.age_years if age_base is None else age_base
+        ages = np.float32(base) \
+            + np.float32(self.years_per_period) * np.arange(n_epochs,
+                                                            dtype=np.float32)
+        return lifetime_population(
+            DimmBatch.from_population([self.dimm]), ages,
+            np.full(n_epochs, self.temp_C), refresh_ms=self.refresh_ms,
+            region="worst", multibit=True, diagnostics=diagnostics)
+
     def timing(self) -> TimingParams:
-        if self._current is None or self._step % self.period_steps == 0:
-            self._current = diva_profile(self.dimm, temp_C=self.temp_C,
-                                         refresh_ms=self.refresh_ms)
+        epoch = self._step // self.period_steps
+        at_boundary = self._timings is None or epoch != self._cur_epoch
+        if at_boundary and self._age_base != self.dimm.age_years:
+            # externally-applied aging restarts the schedule from the DIMM's
+            # current age — but only at a re-profiling boundary: mid-period
+            # mutations keep serving the stale table until the next period,
+            # exactly the staleness window the old per-period walker had
+            # (and that stale_fail models); extensions below reuse _age_base
+            # so already-served epochs never retroactively change
+            self._age_base, self._epoch_base = self.dimm.age_years, epoch
+            self._timings = None
+        self._cur_epoch = epoch
+        rel = epoch - self._epoch_base
+        if self._timings is None or rel >= len(self._timings):
+            n = max(4, rel + 1,
+                    0 if self._timings is None else 2 * len(self._timings))
+            self._timings = self.lifecycle(n, self._age_base)["timings"][:, 0]
         self._step += 1
-        return self._current
+        return TimingParams(*(float(v) for v in self._timings[rel]))
 
 
 @dataclass
@@ -142,16 +232,18 @@ class ALDRAM:
 
     @classmethod
     def install(cls, dimm: DimmModel, temps=(55.0, 85.0)) -> "ALDRAM":
-        age0 = dimm.age_years
-        dimm.age_years = 0.0
-        try:
-            # AL-DRAM has no test region concept: we give it the *oracle*
-            # min-safe over all rows at install time (the paper's generous
-            # assumption for the baseline) but WITHOUT guardband re-profiling.
-            table = {t: conventional_profile(dimm, temp_C=t) for t in temps}
-        finally:
-            dimm.age_years = age0
-        return cls(table)
+        # AL-DRAM has no test region concept: we give it the *oracle*
+        # min-safe over all rows at install time (the paper's generous
+        # assumption for the baseline) but WITHOUT guardband re-profiling.
+        # Install is one jitted lifetime scan whose "epochs" are the
+        # temperature bins of a zero-aging schedule (ages override the
+        # DIMM's age leaf), reproducing conventional_profile per bin.
+        out = lifetime_population(
+            DimmBatch.from_population([dimm]),
+            np.zeros(len(temps), np.float32), np.asarray(temps, np.float64),
+            region="all", multibit=False, diagnostics=False)
+        return cls({t: TimingParams(*(float(v) for v in out["timings"][i, 0]))
+                    for i, t in enumerate(temps)})
 
     def timing(self, temp_C: float) -> TimingParams:
         key = min(self.table, key=lambda t: abs(t - temp_C))

@@ -14,6 +14,12 @@ repair-resolved row-source tables, scramble tables — built once from
                              single jitted ``lax.scan`` over the timing grid
                              (Sec 6.1); no Python loop over DIMMs, subarrays
                              or patterns.
+  * ``lifetime_population`` — the whole online-profiling *lifecycle* (Sec 6.1
+                             fn 2): one jitted ``lax.scan`` over profiling
+                             epochs, applying host-precomputed aging-drift and
+                             temperature-bin adders, re-running the DIVA sweep
+                             each epoch, and emitting per-DIMM (timing,
+                             stale-table failure, ECC-exposure) trajectories.
 
 Monte-Carlo decisions use a counter-based hash (``query_uniform``) computed
 identically by numpy (legacy per-DIMM path in core/errors.py) and jax (this
@@ -21,6 +27,12 @@ module), so the batched profiler reproduces the legacy walker bit-for-bit on
 the uniform draws.  The profiling sweep itself uses fused jnp (regions are
 reduction-dominated and tiny for DIVA); the Pallas kernel serves the
 full-grid queries where the (mats, rows, cols) tensor is the product.
+
+Every entry point takes ``mesh=``: a 1-D device mesh (``sharding.dimm_mesh``)
+over which the DIMM axis is sharded via the ``sharding.shard_map`` shim.  The
+hash RNG is keyed by each DIMM's global serial — which travels with its shard
+— so sharding (and the padding that makes D divisible by the mesh) cannot
+change any draw: sharded results are bit-identical to the single-device path.
 """
 from __future__ import annotations
 
@@ -225,13 +237,21 @@ def condition_adders(batch: DimmBatch, temp_C: float,
 
 # ------------------------------------------------- region failure decisions
 
-def _region_fail_lambda(batch: DimmBatch, pidx: int, t_op, rows, stress,
-                        adder, iters: int, multibit: bool):
-    """(D,) bool: does the row region fail the Monte-Carlo test at t_op?
+def _region_eval(batch: DimmBatch, pidx: int, t_op, rows, stress,
+                 adder, iters: int, multibit: bool):
+    """Monte-Carlo region test of the whole batch at one operating point.
+
+    Returns ``(fails, lam_total)``: (D,) bool — does the row region fail the
+    test at t_op — and (D,) f32 — the expected failure count behind the
+    accept/reject draws, summed over subarrays and patterns (the ECC-exposure
+    integrand of the lifetime sweep when ``multibit=True``).
 
     Mirrors ``DimmModel.region_has_errors`` op-for-op in float32; subarrays
     ride a lax.scan (memory), patterns/DIMMs are broadcast axes.  ``adder`` is
     the (D,) host-computed operating-condition term (condition_adders).
+    ``t_op`` is a scalar (one grid point for everyone) or a (D,) vector (the
+    lifetime sweep testing each DIMM's own previous table); the hash sees the
+    same per-DIMM bits either way.
     """
     g = batch.geom
     R, C, S = g.rows_per_mat, g.cols_per_mat, g.subarrays
@@ -242,11 +262,16 @@ def _region_fail_lambda(batch: DimmBatch, pidx: int, t_op, rows, stress,
     kbl, kwl = batch.k_bl[:, pidx], batch.k_wl[:, pidx]
     kmat, krow = batch.k_mat[:, pidx], batch.k_row[:, pidx]
     chip0 = batch.chip_offsets[:, 0]
+    t_op = jnp.asarray(t_op, jnp.float32)
     t_q = jnp.round(t_op * 4).astype(jnp.uint32)
+    per_dimm_t = t_op.ndim == 1
+    t_cell = t_op[:, None, None, None, None] if per_dimm_t else t_op
+    t_hash = t_q[:, None] if per_dimm_t else t_q
     P = stress.shape[0]
     pat_idx = jnp.arange(P)[None, :]
 
     def per_subarray(acc, s):
+        fails_acc, lam_acc = acc
         rsel = jnp.take(jnp.take(batch.row_src, s, axis=1), rows, axis=1)
         rf = rsel.astype(jnp.float32)                    # (D, Rr)
         d_bl = jnp.where(even[None, None, :], rf[:, :, None],
@@ -261,7 +286,7 @@ def _region_fail_lambda(batch: DimmBatch, pidx: int, t_op, rows, stress,
         t = t + adder[:, None, None, None, None]
         t = t + chip0[:, None, None, None, None]
         t = t + jnp.take(batch.sub_offsets, s, axis=1)[:, None, None, None, None]
-        p = fail_mixture(t, t_op, batch.sigma[:, None, None, None, None],
+        p = fail_mixture(t, t_cell, batch.sigma[:, None, None, None, None],
                          batch.outlier_rate[:, None, None, None, None],
                          batch.outlier_ns[:, None, None, None, None], xp=jnp)
         if multibit:
@@ -270,14 +295,15 @@ def _region_fail_lambda(batch: DimmBatch, pidx: int, t_op, rows, stress,
                 2 * iters * chips * p_multi.sum(axis=(2, 3, 4)) / 72.0, 0.0)
         else:
             lam = 2 * iters * chips * p.sum(axis=(2, 3, 4))   # (D,P)
-        u = query_uniform(batch.serial[:, None], pidx, t_q, int(multibit),
+        u = query_uniform(batch.serial[:, None], pidx, t_hash, int(multibit),
                           s, pat_idx, xp=jnp)
-        acc = acc | jnp.any(u < -jnp.expm1(-lam), axis=1)
-        return acc, None
+        fails_acc = fails_acc | jnp.any(u < -jnp.expm1(-lam), axis=1)
+        return (fails_acc, lam_acc + lam.sum(axis=1)), None
 
-    init = jnp.zeros(batch.serial.shape[0], bool)
-    fails, _ = jax.lax.scan(per_subarray, init, jnp.arange(S))
-    return fails
+    D = batch.serial.shape[0]
+    init = (jnp.zeros(D, bool), jnp.zeros(D, jnp.float32))
+    (fails, lam_total), _ = jax.lax.scan(per_subarray, init, jnp.arange(S))
+    return fails, lam_total
 
 
 def _sweep_param(batch: DimmBatch, pidx: int, floor, rows, stress, adder,
@@ -291,8 +317,8 @@ def _sweep_param(batch: DimmBatch, pidx: int, floor, rows, stress, adder,
     std = getattr(STANDARD, PARAMS[pidx])
 
     def step(_, t_op):
-        fail = _region_fail_lambda(batch, pidx, t_op, rows, stress, adder,
-                                   iters, multibit)
+        fail, _ = _region_eval(batch, pidx, t_op, rows, stress, adder,
+                               iters, multibit)
         return None, fail | (t_op < floor - 1e-9)
 
     _, stops = jax.lax.scan(step, None, grid)            # (G, D)
@@ -302,10 +328,8 @@ def _sweep_param(batch: DimmBatch, pidx: int, floor, rows, stress, adder,
     return jnp.minimum(best + guard_cycles * CYCLE_NS, std)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("guard_cycles", "iters", "multibit"))
-def _profile_jit(batch: DimmBatch, rows, stress, adder, *,
-                 guard_cycles: int, iters: int, multibit: bool):
+def _profile_impl(batch: DimmBatch, rows, stress, adder, *,
+                  guard_cycles: int, iters: int, multibit: bool):
     """The whole-population sweep: tRCD first, tRAS floored by tRCD + 10 ns
     (the Section 4 infrastructure constraint), then tRP and tWR."""
     D = batch.serial.shape[0]
@@ -319,32 +343,103 @@ def _profile_jit(batch: DimmBatch, rows, stress, adder, *,
     return jnp.stack([trcd, tras, trp, twr], axis=1)
 
 
+_profile_jit = functools.partial(
+    jax.jit, static_argnames=("guard_cycles", "iters", "multibit"))(_profile_impl)
+
+
+# ------------------------------------------------- DIMM-axis sharded dispatch
+
+_SHARD_CACHE: dict = {}
+
+
+def _mesh_key(mesh):
+    return (tuple(d.id for d in mesh.devices.flat), mesh.axis_names)
+
+
+def _pad0(a, pad: int):
+    """Pad dim 0 by repeating the last entry ``pad`` times.  Padding clones a
+    real DIMM — its serial travels with it, so its (discarded) draws are that
+    DIMM's and every kept DIMM's draws are untouched."""
+    if pad == 0:
+        return a
+    a = jnp.asarray(a)
+    return jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)], axis=0)
+
+
+def _run_sharded(name: str, mesh, impl, args, statics: dict,
+                 batch_argnums: tuple):
+    """Run ``impl(*args, **statics)`` under ``sharding.shard_map`` with dim 0
+    of every ``batch_argnums`` arg (pytrees included) sharded over the mesh's
+    single axis.  D is padded up to a multiple of the axis size and every
+    output's dim 0 sliced back, so any population size runs on any mesh.
+    Compiled programs are cached per (entry point, mesh, statics).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding import shard_map
+    assert len(mesh.axis_names) == 1, "population meshes are 1-D (dimm axis)"
+    axis = mesh.axis_names[0]
+    n = int(mesh.devices.size)
+    lead = jax.tree_util.tree_leaves(args[batch_argnums[0]])[0]
+    D = int(lead.shape[0])
+    pad = (-D) % n
+    args = [jax.tree.map(lambda a: _pad0(a, pad), a) if i in batch_argnums
+            else a for i, a in enumerate(args)]
+
+    key = (name, _mesh_key(mesh), tuple(sorted(statics.items())))
+    prog = _SHARD_CACHE.get(key)
+    if prog is None:
+        in_specs = tuple(P(axis) if i in batch_argnums else P()
+                         for i in range(len(args)))
+        fn = functools.partial(impl, **statics)
+        prog = _SHARD_CACHE[key] = jax.jit(
+            shard_map(fn, mesh, in_specs=in_specs, out_specs=P(axis)))
+    out = prog(*args)
+    return jax.tree.map(lambda a: a[:D], out)
+
+
+def _dispatch(name: str, mesh, impl, jitted, args, statics: dict,
+              batch_argnums: tuple):
+    """One dispatch site for every substrate entry point: the cached jitted
+    program when ``mesh`` is None, the shard_map route otherwise."""
+    if mesh is None:
+        return jitted(*args, **statics)
+    return _run_sharded(name, mesh, impl, args, statics, batch_argnums)
+
+
+def _resolve_rows(region, geom: DimmGeometry) -> np.ndarray:
+    if isinstance(region, str):
+        if region == "worst":
+            return worst_rows_internal(geom)
+        if region == "all":
+            return np.arange(geom.rows_per_mat)
+        raise ValueError(f"unknown region {region!r}; "
+                         "use 'worst', 'all', or an index array")
+    return np.asarray(region)
+
+
 def profile_population_arrays(batch: DimmBatch, *, region: str = "worst",
                               temp_C: float = 55.0, refresh_ms: float = 64.0,
                               guard_cycles: int = 1,
                               multibit_only: bool = False,
                               patterns=DEFAULT_PATTERNS,
-                              iters: int = DEFAULT_ITERS) -> np.ndarray:
+                              iters: int = DEFAULT_ITERS,
+                              mesh=None) -> np.ndarray:
     """(D, 4) profiled timings in PARAMS order; one jitted call for all DIMMs.
 
     ``region="worst"`` is DIVA Profiling (the design-induced slowest rows);
-    ``region="all"`` is conventional every-row profiling.
+    ``region="all"`` is conventional every-row profiling.  ``mesh`` shards the
+    DIMM axis over a 1-D device mesh (``sharding.dimm_mesh``) — bit-identical
+    to the single-device path.
     """
-    if isinstance(region, str):
-        if region == "worst":
-            rows = worst_rows_internal(batch.geom)
-        elif region == "all":
-            rows = np.arange(batch.geom.rows_per_mat)
-        else:
-            raise ValueError(f"unknown region {region!r}; "
-                             "use 'worst', 'all', or an index array")
-    else:
-        rows = np.asarray(region)
+    rows = _resolve_rows(region, batch.geom)
     adder = condition_adders(batch, temp_C, refresh_ms)
-    out = _profile_jit(batch, jnp.asarray(rows, jnp.int32),
-                       jnp.asarray(pattern_stress(patterns)),
-                       jnp.asarray(adder), guard_cycles=guard_cycles,
-                       iters=iters, multibit=multibit_only)
+    args = (batch, jnp.asarray(rows, jnp.int32),
+            jnp.asarray(pattern_stress(patterns)), jnp.asarray(adder))
+    statics = dict(guard_cycles=guard_cycles, iters=iters,
+                   multibit=multibit_only)
+    out = _dispatch("profile", mesh, _profile_impl, _profile_jit, args,
+                    statics, batch_argnums=(0, 3))
     return np.asarray(out)
 
 
@@ -352,6 +447,132 @@ def profile_population(batch: DimmBatch, **kw) -> list[TimingParams]:
     """Per-DIMM ``TimingParams`` for the whole population (see arrays variant)."""
     arr = profile_population_arrays(batch, **kw)
     return [TimingParams(*(float(v) for v in row)) for row in arr]
+
+
+# --------------------------------------------- lifetime sweeps (Sec 6.1 fn 2)
+
+def lifetime_adders(batch: DimmBatch, ages, temps,
+                    refresh_ms: float = 64.0) -> np.ndarray:
+    """(E, D) f32 per-epoch operating-condition adders, HOST-side in numpy
+    with the op order of ``latency.condition_adder`` — the per-DIMM Python
+    lifecycle (``profiling.lifetime_loop``) and the jitted epoch scan add
+    literally identical bits (parity by construction, immune to XLA fusion).
+
+    ``ages`` / ``temps``: per-epoch (E,) or per-epoch-per-DIMM (E, D) values;
+    ``ages`` *overrides* the batch's static ``age_years`` leaf — the epoch
+    schedule owns the drift.
+    """
+    D = batch.n_dimms
+    ages = np.asarray(ages, np.float32)
+    temps = np.asarray(temps, np.float64)
+    if ages.ndim == 1:
+        ages = np.broadcast_to(ages[:, None], (ages.shape[0], D))
+    if temps.ndim == 1:
+        temps = np.broadcast_to(temps[:, None], (temps.shape[0], D))
+    if not (ages.shape == temps.shape == (ages.shape[0], D)):
+        raise ValueError(f"ages {ages.shape} / temps {temps.shape} must both "
+                         f"resolve to (n_epochs, {D})")
+    t_delta = np.float32(temps - 85.0)
+    _, r_log = condition_scalars(85.0, refresh_ms)
+    tc = np.asarray(batch.temp_coef, np.float32)[None, :]
+    rc = np.asarray(batch.refresh_coef, np.float32)[None, :]
+    ac = np.asarray(batch.aging_coef, np.float32)[None, :]
+    return tc * t_delta + rc * r_log + ac * ages
+
+
+def _lifetime_impl(batch: DimmBatch, rows, stress, adders_dl, *,
+                   guard_cycles: int, iters: int, multibit: bool,
+                   diagnostics: bool):
+    """One ``lax.scan`` over profiling epochs.  ``adders_dl`` is (D, E) —
+    DIMM-leading so the sharded runner can split dim 0 like every other arg;
+    the scan walks the epoch axis.
+
+    Each epoch re-runs the full DIVA sweep under that epoch's conditions;
+    with ``diagnostics`` it additionally reports, per DIMM:
+      * ``stale``: would the PREVIOUS epoch's table (the standard table at
+        epoch 0) now fail the region test — the aging-drift unsafety that
+        static AL-DRAM-style tables accumulate (Sec 6.1 fn 2);
+      * ``ecc``: expected SECDED-multi-bit codewords of the region test at
+        the freshly profiled point — the residual ECC exposure DIVA+ECC
+        carries at its operating point.
+    Without it the epoch body is just the sweep — what the timing-only
+    wrappers (ALDRAM.install, DivaProfiler) pay for.
+
+    Returns DIMM-leading trajectories: (D, E, 4), (D, E) bool, (D, E) f32
+    — or only the timings when ``diagnostics`` is off.
+    """
+    D = batch.serial.shape[0]
+    std = jnp.asarray([getattr(STANDARD, p) for p in PARAMS], jnp.float32)
+    kw = dict(rows=rows, stress=stress, guard_cycles=guard_cycles,
+              iters=iters, multibit=multibit)
+
+    def epoch(prev_t, adder):
+        t_new = _profile_impl(batch, adder=adder, **kw)          # (D, 4)
+        if not diagnostics:
+            return t_new, (t_new,)
+        stale = jnp.zeros(D, bool)
+        ecc = jnp.zeros(D, jnp.float32)
+        for p in range(len(PARAMS)):
+            fail_p, _ = _region_eval(batch, p, prev_t[:, p], rows, stress,
+                                     adder, iters, multibit)
+            stale = stale | fail_p
+            _, lam_p = _region_eval(batch, p, t_new[:, p], rows, stress,
+                                    adder, iters, True)
+            ecc = ecc + lam_p
+        return t_new, (t_new, stale, ecc)
+
+    init = jnp.broadcast_to(std, (D, len(PARAMS)))
+    _, ys = jax.lax.scan(epoch, init, adders_dl.T)
+    return tuple(jnp.moveaxis(y, 0, 1) for y in ys)
+
+
+_lifetime_jit = functools.partial(
+    jax.jit, static_argnames=("guard_cycles", "iters", "multibit",
+                              "diagnostics"))(_lifetime_impl)
+
+
+def lifetime_population(batch: DimmBatch, ages, temps, *,
+                        refresh_ms: float = 64.0, region: str = "worst",
+                        guard_cycles: int = 1, multibit: bool = True,
+                        patterns=DEFAULT_PATTERNS, iters: int = DEFAULT_ITERS,
+                        diagnostics: bool = True, mesh=None) -> dict:
+    """The whole online re-profiling lifecycle as ONE device program.
+
+    ``ages`` / ``temps`` give each profiling epoch's operating point ((E,) or
+    (E, D)); every epoch re-runs the DIVA sweep under drifted conditions —
+    the Sec 6.1 argument for *online* profiling, and the drift that makes
+    static AL-DRAM tables unsafe.  Epoch-by-epoch timing decisions are
+    bit-identical to the retained Python reference
+    (``profiling.lifetime_loop``) via the shared per-query hash.
+
+    Returns epoch-leading arrays: ``timings`` (E, D, 4) ns in PARAMS order,
+    ``stale_fail`` (E, D) bool (previous epoch's table — standard at epoch 0
+    — now fails the region test), ``ecc_lambda`` (E, D) expected multi-bit
+    codewords at the fresh operating point, plus the resolved (E, D)
+    ``ages``/``temps`` schedule.  ``diagnostics=False`` skips the stale/ECC
+    evaluations (and their keys) — the cheap timing-only mode the ALDRAM /
+    DivaProfiler wrappers use.  ``mesh`` shards the DIMM axis.
+    """
+    rows = _resolve_rows(region, batch.geom)
+    adders = lifetime_adders(batch, ages, temps, refresh_ms)     # (E, D)
+    args = (batch, jnp.asarray(rows, jnp.int32),
+            jnp.asarray(pattern_stress(patterns)), jnp.asarray(adders.T))
+    statics = dict(guard_cycles=guard_cycles, iters=iters, multibit=multibit,
+                   diagnostics=diagnostics)
+    out = _dispatch("lifetime", mesh, _lifetime_impl, _lifetime_jit, args,
+                    statics, batch_argnums=(0, 3))
+    out = [np.asarray(v) for v in out]
+    E, D = adders.shape
+    # the resolved schedule replays bit-identically: ages are consumed as
+    # f32, temps as f64 — echo each at its consumed precision
+    to_ed = lambda v, dt: np.broadcast_to(
+        np.asarray(v, dt).reshape((E, -1)), (E, D)).copy()
+    res = {"timings": np.moveaxis(out[0], 0, 1),
+           "ages": to_ed(ages, np.float32), "temps": to_ed(temps, np.float64)}
+    if diagnostics:
+        res["stale_fail"] = np.moveaxis(out[1], 0, 1)
+        res["ecc_lambda"] = np.moveaxis(out[2], 0, 1)
+    return res
 
 
 # --------------------------------------------------- full-grid batched API
@@ -370,13 +591,27 @@ def _pack_coeffs(batch: DimmBatch, pidx: int, t_op, stress, adder,
     ], axis=1).astype(jnp.float32)
 
 
+def _fail_prob_impl(row_src, d_mat, coeffs, *, cols: int, pallas: bool):
+    from repro.kernels import ops
+    return ops.fail_prob_batch(row_src, d_mat, coeffs, cols=cols,
+                               pallas=pallas)
+
+
+# the unsharded route is jitted too, so the jnp oracle (REPRO_FORCE_REF)
+# compiles identically with and without a mesh — eager jnp fuses differently
+# and would cost the sharded paths their bit-parity
+_fail_prob_jit = functools.partial(
+    jax.jit, static_argnames=("cols", "pallas"))(_fail_prob_impl)
+
+
 def fail_prob_grids(batch: DimmBatch, param: str, t_op: float, *,
                     temp_C: float = 85.0, refresh_ms: float = 64.0,
                     pattern: str = "0101", chip: int = 0,
-                    subarray: int = 0) -> jnp.ndarray:
+                    subarray: int = 0, mesh=None) -> jnp.ndarray:
     """(D, mats, rows, cols) failure-probability grids for every DIMM — the
     batched sibling of ``DimmModel.fail_prob_grid``, computed by the Pallas
-    kernel (or its jnp oracle under REPRO_FORCE_REF)."""
+    kernel (or its jnp oracle under REPRO_FORCE_REF).  ``mesh`` shards the
+    DIMM axis."""
     from repro.kernels import ops
     pidx = PARAMS.index(param)
     adder = condition_adders(batch, temp_C, refresh_ms)
@@ -385,21 +620,21 @@ def fail_prob_grids(batch: DimmBatch, param: str, t_op: float, *,
                           jnp.asarray(adder), chip, subarray)
     row_src = batch.row_src[:, subarray]
     _, d_mat, _ = _geom_consts(batch.geom)
-    fp = functools.partial(ops.fail_prob, cols=batch.geom.cols_per_mat)
-    return jax.vmap(fp, in_axes=(0, None, 0))(row_src, jnp.asarray(d_mat),
-                                              coeffs)
+    statics = dict(cols=batch.geom.cols_per_mat, pallas=ops.use_pallas())
+    return _dispatch("fail_prob", mesh, _fail_prob_impl, _fail_prob_jit,
+                     (jnp.asarray(row_src), jnp.asarray(d_mat), coeffs),
+                     statics, batch_argnums=(0, 2))
 
 
-@functools.partial(jax.jit, static_argnames=("pidx", "iters", "internal"))
-def _row_lambda_jit(batch: DimmBatch, t_op, stress, adder, *,
-                    pidx: int, iters: int, internal: bool):
+def _row_lambda_impl(batch: DimmBatch, t_op, stress, adder, *,
+                     pidx: int, iters: int, internal: bool, pallas: bool):
     from repro.kernels import ops
     g = batch.geom
     S, P = g.subarrays, stress.shape[0]
     _, d_mat, _ = _geom_consts(g)
     d_mat = jnp.asarray(d_mat)
-    fp = functools.partial(ops.fail_prob, cols=g.cols_per_mat)
-    fp_d = jax.vmap(fp, in_axes=(0, None, 0))            # over DIMMs
+    fp_d = functools.partial(ops.fail_prob_batch, cols=g.cols_per_mat,
+                             pallas=pallas)               # over DIMMs
 
     def per_subarray(_, s):
         def per_pattern(acc_p, pi):
@@ -421,17 +656,26 @@ def _row_lambda_jit(batch: DimmBatch, t_op, stress, adder, *,
     return lam.reshape(lam.shape[0], -1)
 
 
+_row_lambda_jit = functools.partial(
+    jax.jit, static_argnames=("pidx", "iters", "internal",
+                              "pallas"))(_row_lambda_impl)
+
+
 def row_error_lambda(batch: DimmBatch, param: str, t_op: float, *,
                      temp_C: float = 85.0, refresh_ms: float = 64.0,
                      patterns=DEFAULT_PATTERNS, iters: int = DEFAULT_ITERS,
-                     internal_order: bool = False) -> np.ndarray:
+                     internal_order: bool = False, mesh=None) -> np.ndarray:
     """(D, subarrays*rows) expected error counts per row address for every
-    DIMM — the population-scale ``row_error_counts(sample=False)``."""
+    DIMM — the population-scale ``row_error_counts(sample=False)``.  ``mesh``
+    shards the DIMM axis."""
+    from repro.kernels import ops
     adder = condition_adders(batch, temp_C, refresh_ms)
-    out = _row_lambda_jit(batch, np.float32(t_op),
-                          jnp.asarray(pattern_stress(patterns)),
-                          jnp.asarray(adder), pidx=PARAMS.index(param),
-                          iters=iters, internal=internal_order)
+    args = (batch, np.float32(t_op), jnp.asarray(pattern_stress(patterns)),
+            jnp.asarray(adder))
+    statics = dict(pidx=PARAMS.index(param), iters=iters,
+                   internal=internal_order, pallas=ops.use_pallas())
+    out = _dispatch("row_lambda", mesh, _row_lambda_impl, _row_lambda_jit,
+                    args, statics, batch_argnums=(0, 3))
     return np.asarray(out)
 
 
@@ -440,8 +684,7 @@ def row_error_lambda(batch: DimmBatch, param: str, t_op: float, *,
 N_LANES = 9 * 64  # chips x burst bits, the SECDED burst of core/shuffling.py
 
 
-@functools.partial(jax.jit, static_argnames=("n_accesses", "pallas"))
-def _shuffling_jit(probs, seeds, *, n_accesses: int, pallas: bool):
+def _shuffling_impl(probs, seeds, *, n_accesses: int, pallas: bool):
     """The whole Fig 17 experiment as one program: sample (D, n, 9, 64) error
     tensors with the counter-hash RNG, lay the lanes out per codeword with and
     without DIVA Shuffling (kernels/shuffle permutation matmul), and score
@@ -487,8 +730,12 @@ def _shuffling_jit(probs, seeds, *, n_accesses: int, pallas: bool):
             uncorrectable[1], undetected[0], undetected[1])
 
 
+_shuffling_jit = functools.partial(
+    jax.jit, static_argnames=("n_accesses", "pallas"))(_shuffling_impl)
+
+
 def shuffling_gain_population(bit_error_prob, *, seeds=None, seed: int = 0,
-                              n_accesses: int = 2000) -> dict:
+                              n_accesses: int = 2000, mesh=None) -> dict:
     """Fig 17 at population scale: per-DIMM correctable-error fractions with
     and without DIVA Shuffling, for (D, 9, 64) burst-bit error profiles (from
     ``burst_bit_profile_population`` or synthetic), in one jitted call.
@@ -498,7 +745,8 @@ def shuffling_gain_population(bit_error_prob, *, seeds=None, seed: int = 0,
     ``shuffling.shuffling_gain_loop`` count-for-count (shared counter hash).
     Beyond the loop's counts it reports uncorrectable and *undetected*
     (syndrome-aliased multi-bit) codewords per mode via the SECDED syndrome
-    kernel.
+    kernel.  ``mesh`` shards the DIMM axis (each DIMM's draws are keyed by
+    its own seed, so sharding cannot change them).
     """
     probs = np.asarray(bit_error_prob, np.float32)
     if probs.ndim == 2:
@@ -510,8 +758,10 @@ def shuffling_gain_population(bit_error_prob, *, seeds=None, seed: int = 0,
     seeds = np.asarray(seeds, np.uint32)
     assert seeds.shape == (D,)
     from repro.kernels import ops
-    out = _shuffling_jit(jnp.asarray(probs), jnp.asarray(seeds),
-                         n_accesses=n_accesses, pallas=ops.use_pallas())
+    statics = dict(n_accesses=n_accesses, pallas=ops.use_pallas())
+    out = _dispatch("shuffling", mesh, _shuffling_impl, _shuffling_jit,
+                    (jnp.asarray(probs), jnp.asarray(seeds)), statics,
+                    batch_argnums=(0, 1))
     total, c_ns, c_s, unc_ns, unc_s, und_ns, und_s = (
         np.asarray(v, np.int64) for v in out)
     denom = np.maximum(total, 1)
@@ -526,7 +776,7 @@ def shuffling_gain_population(bit_error_prob, *, seeds=None, seed: int = 0,
 def burst_bit_profile_population(batch: DimmBatch, param: str, t_op: float, *,
                                  temp_C: float = 85.0, refresh_ms: float = 64.0,
                                  pattern: str = "0101",
-                                 subarray: int = 0) -> np.ndarray:
+                                 subarray: int = 0, mesh=None) -> np.ndarray:
     """(D, 9, 64) per-access error probability per burst-bit position — the
     population-scale Fig 12 profile feeding ``shuffling_gain_population``.
 
@@ -548,7 +798,7 @@ def burst_bit_profile_population(batch: DimmBatch, param: str, t_op: float, *,
     for chip in range(g.chips):
         grids = fail_prob_grids(batch, param, t_op, temp_C=temp_C,
                                 refresh_ms=refresh_ms, pattern=pattern,
-                                chip=chip, subarray=subarray)
+                                chip=chip, subarray=subarray, mesh=mesh)
         # reduce on device: only (D, 64) floats cross to host per chip
         out[:, chip, :] = np.asarray(jnp.mean(grids, axis=2)[:, mats, cols])
     out[:, 8, :] = out[:, :g.chips, :].mean(axis=1)

@@ -7,6 +7,7 @@ to route everything through the pure-jnp oracles in ref.py.
 """
 from __future__ import annotations
 
+import functools
 import os
 
 import jax
@@ -41,12 +42,30 @@ def secded_syndrome(code_bits, tile: int | None = None):
     return _syn_pallas(code_bits, interpret=interpret_mode(), **kw)
 
 
-def fail_prob(row_src, d_mat, coeffs, *, cols: int, open_bitline: bool = True):
-    if not use_pallas():
+def fail_prob(row_src, d_mat, coeffs, *, cols: int, open_bitline: bool = True,
+              pallas: bool | None = None):
+    """``pallas=None`` resolves REPRO_FORCE_REF at trace time; callers that
+    cache compiled programs pass the resolved bool so the backend choice keys
+    their cache (the ``substrate._shuffling_jit`` convention)."""
+    if pallas is None:
+        pallas = use_pallas()
+    if not pallas:
         return _ref.fail_prob(row_src, d_mat, coeffs, cols=cols,
                               open_bitline=open_bitline)
     return _fp_pallas(row_src, d_mat, coeffs, cols=cols,
                       open_bitline=open_bitline, interpret=interpret_mode())
+
+
+def fail_prob_batch(row_src, d_mat, coeffs, *, cols: int,
+                    open_bitline: bool = True, pallas: bool | None = None):
+    """``fail_prob`` vmapped over a leading population (DIMM) axis of
+    ``row_src``/``coeffs`` — the dispatch the batched substrate and its
+    sharded routes share (one dispatch site: the per-DIMM ``fail_prob``)."""
+    if pallas is None:
+        pallas = use_pallas()
+    fn = functools.partial(fail_prob, cols=cols, open_bitline=open_bitline,
+                           pallas=pallas)
+    return jax.vmap(fn, in_axes=(0, None, 0))(row_src, d_mat, coeffs)
 
 
 def diva_shuffle(bursts, inverse: bool = False, shuffle: bool = True,

@@ -47,6 +47,24 @@ def shard_map(f, mesh, in_specs, out_specs):
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                check_rep=False)
 
+# ------------------------------------------------ population (DIMM-axis) mesh
+
+def dimm_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D device mesh over the population axis (``"dimms"``) consumed by the
+    sharded substrate entry points (``core/substrate.py``'s ``mesh=``).  N
+    defaults to every visible device; a single-device mesh is valid and runs
+    the same shard_map program — what single-CPU CI exercises — while
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (or a real TPU
+    slice) provides true multi-device meshes."""
+    import numpy as np
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    if not 0 < n <= len(devs):
+        raise ValueError(f"dimm_mesh({n_devices}): only {len(devs)} "
+                         "device(s) visible")
+    return Mesh(np.asarray(devs[:n]), ("dimms",))
+
+
 # name -> axis request per trailing dim. "m"=model, "f"=fsdp(data), None=replicate
 _RULES: dict[str, tuple] = {
     # embeddings / head

@@ -1,0 +1,189 @@
+"""Lifetime-sweep parity: the jitted epoch scan (substrate.lifetime_population)
+vs the retained Python-loop reference (profiling.lifetime_loop), the
+DivaProfiler/ALDRAM thin wrappers, and the ramlite no-retrace regression."""
+import numpy as np
+import pytest
+
+from repro.core.geometry import SMALL
+from repro.core.population import make_population
+from repro.core.profiling import (ALDRAM, DivaProfiler,
+                                  conventional_profile_loop, diva_profile,
+                                  lifetime_loop)
+from repro.core.substrate import DimmBatch, lifetime_population
+from repro.core.timing import PARAMS, STANDARD, TimingParams
+
+POP = make_population(SMALL, 3)
+BATCH = DimmBatch.from_population(POP)
+AGES = np.array([0.0, 2.5, 5.0, 8.0], np.float32)
+TEMPS = np.array([55.0, 55.0, 70.0, 85.0])
+
+
+@pytest.fixture(scope="module")
+def lifecycle():
+    return lifetime_population(BATCH, AGES, TEMPS)
+
+
+# ------------------------------------------------------------ scan vs loop
+
+def test_lifetime_matches_loop_reference_bit_for_bit(lifecycle):
+    """THE acceptance property: epoch-by-epoch timing decisions of the jitted
+    scan equal the per-DIMM Python lifecycle exactly; stale-table decisions
+    share the same per-query hash draws; ECC exposure agrees to float32."""
+    assert lifecycle["timings"].shape == (4, 3, len(PARAMS))
+    for i, dimm in enumerate(POP):
+        ref = lifetime_loop(dimm, AGES, TEMPS)
+        np.testing.assert_array_equal(lifecycle["timings"][:, i],
+                                      ref["timings"], err_msg=str(i))
+        np.testing.assert_array_equal(lifecycle["stale_fail"][:, i],
+                                      ref["stale_fail"], err_msg=str(i))
+        np.testing.assert_allclose(lifecycle["ecc_lambda"][:, i],
+                                   ref["ecc_lambda"], rtol=1e-4, atol=1e-6)
+
+
+def test_lifetime_parity_with_non_default_iters_and_patterns():
+    """patterns/iters must reach the loop's per-epoch sweep too — parity is
+    claimed for ALL knobs, not just the defaults."""
+    kw = dict(patterns=("0101", "0011"), iters=200)
+    out = lifetime_population(DimmBatch.from_population(POP[:1]), AGES[:2],
+                              TEMPS[:2], **kw)
+    ref = lifetime_loop(POP[0], AGES[:2], TEMPS[:2], **kw)
+    np.testing.assert_array_equal(out["timings"][:, 0], ref["timings"])
+    np.testing.assert_array_equal(out["stale_fail"][:, 0], ref["stale_fail"])
+
+
+def test_lifetime_timing_only_mode_matches(lifecycle):
+    """diagnostics=False (the ALDRAM/DivaProfiler fast path) skips the
+    stale/ECC evaluations but profiles identically."""
+    out = lifetime_population(BATCH, AGES, TEMPS, diagnostics=False)
+    np.testing.assert_array_equal(out["timings"], lifecycle["timings"])
+    assert "stale_fail" not in out and "ecc_lambda" not in out
+
+
+def test_lifetime_loop_restores_dimm_age():
+    d = POP[0]
+    age0 = d.age_years
+    lifetime_loop(d, AGES[:2], TEMPS[:2])
+    assert d.age_years == age0
+
+
+def test_epoch_zero_equals_one_shot_diva_profile(lifecycle):
+    """The lifecycle's first epoch (age 0, 55C) is exactly diva_profile."""
+    tp = diva_profile(POP[1], temp_C=55.0)
+    assert tuple(lifecycle["timings"][0, 1]) == \
+        (tp.trcd, tp.tras, tp.trp, tp.twr)
+
+
+def test_aging_drift_raises_profiled_timings():
+    """lam is monotone in age and the accept draws are age-independent
+    (the hash does not key on conditions), so profiled timings can only
+    move up as the DIMM wears out at a fixed temperature."""
+    ages = np.array([0.0, 3.0, 6.0, 9.0], np.float32)
+    out = lifetime_population(BATCH, ages, np.full(4, 55.0))
+    t = out["timings"]
+    assert (np.diff(t, axis=0) >= -1e-6).all()
+    assert (t[-1] > t[0]).any(), "9 years of wearout must move some timing"
+
+
+def test_stale_fail_semantics():
+    """Zero drift: every epoch re-profiles to the same safe table, so no
+    epoch flags its predecessor.  Heavy drift: the previous epoch's table
+    eventually fails the region test — the Sec 6.1 fn 2 argument for online
+    re-profiling."""
+    calm = lifetime_population(BATCH, np.zeros(3, np.float32),
+                               np.full(3, 55.0))
+    assert not calm["stale_fail"].any()
+    drift = lifetime_population(BATCH, np.array([0.0, 10.0], np.float32),
+                                np.full(2, 55.0))
+    assert drift["stale_fail"][1].any(), \
+        "a decade of wearout in one interval must catch some stale table"
+    assert (calm["ecc_lambda"] >= 0).all()
+
+
+# ------------------------------------------------------------ thin wrappers
+
+def test_diva_profiler_serves_lifetime_trajectory():
+    """DivaProfiler == lifetime_loop epoch for epoch, through the one jitted
+    device program; the static-conditions default reduces to the old
+    re-profile-every-period behaviour."""
+    d = POP[0]
+    prof = DivaProfiler(d, period_steps=2, years_per_period=4.0)
+    served = [prof.timing() for _ in range(6)]
+    assert served[0] == served[1] and served[2] == served[3]
+    ref = lifetime_loop(d, 4.0 * np.arange(3, dtype=np.float32),
+                        np.full(3, 55.0))
+    for e in range(3):
+        assert served[2 * e] == TimingParams(*map(float, ref["timings"][e]))
+    static = DivaProfiler(d, period_steps=3)
+    assert static.timing() == diva_profile(d, temp_C=55.0)
+    assert static.timing() == static.timing()
+
+
+def test_diva_profiler_tracks_external_aging():
+    """Mutating dimm.age_years restarts the schedule from the DIMM's current
+    age — but only at a re-profiling boundary: mid-period mutations keep the
+    stale table until the next period (the old walker's staleness window)."""
+    import dataclasses
+    d = dataclasses.replace(POP[0])  # private copy: we mutate age_years
+    prof = DivaProfiler(d, period_steps=2)
+    fresh = prof.timing()
+    assert fresh == diva_profile(d, temp_C=55.0)
+    d.age_years = 9.0
+    assert prof.timing() == fresh  # mid-period: stale table still served
+    aged = prof.timing()           # next boundary re-profiles at age 9
+    assert aged == diva_profile(d, temp_C=55.0)
+    assert aged.trcd >= fresh.trcd  # a decade of wearout cannot lower timings
+    assert prof.timing() == aged  # stable once re-based
+
+
+def test_diva_profiler_extends_horizon_on_demand():
+    prof = DivaProfiler(POP[2], period_steps=1, years_per_period=1.0)
+    first = prof.timing()
+    for _ in range(5):
+        last = prof.timing()
+    assert len(prof._timings) >= 6
+    assert last.trcd >= first.trcd  # drift only moves timings up
+
+
+def test_aldram_install_is_lifetime_scan_over_temp_bins():
+    """ALDRAM.install (temperature bins as epochs of a zero-aging schedule)
+    reproduces the legacy conventional_profile-per-bin table bit for bit —
+    even when the DIMM has already aged (install is define-time, age 0)."""
+    d = POP[1]
+    age0 = d.age_years
+    d.age_years = 6.0
+    try:
+        al = ALDRAM.install(d)
+    finally:
+        d.age_years = age0
+    for t in (55.0, 85.0):
+        assert al.timing(t) == conventional_profile_loop(d, temp_C=t)
+    assert al.timing(60.0) == al.timing(55.0)  # nearest bin
+
+
+# --------------------------------------------------------- no-retrace guard
+
+def test_ramlite_jit_cache_does_not_grow_across_timing_sweep():
+    """TimingParams enter the simulator as traced cycle arrays: sweeping
+    VALUES (same trace shape/banks) must reuse one compiled program — both
+    the trace counter and the jit cache stay flat."""
+    from repro.core import ramlite
+    tr = ramlite.make_trace(ramlite.WORKLOADS[2], 600, 8, seed=3)
+    ramlite.simulate_trace(tr, STANDARD, banks=8)  # compile
+    n0 = ramlite.N_TRACES
+    c0 = ramlite._sim_grid._cache_size()
+    for trp in (12.5, 10.0, 7.5, 5.0):
+        for twr in (15.0, 10.0):
+            ramlite.simulate_trace(tr, STANDARD.replace(trp=trp, twr=twr),
+                                   banks=8)
+    assert ramlite.N_TRACES == n0
+    assert ramlite._sim_grid._cache_size() == c0
+
+
+def test_lifetime_jit_does_not_retrace_on_schedule_values():
+    """Epoch conditions are traced operands: a different (same-length)
+    age/temperature schedule reuses the compiled lifetime scan."""
+    from repro.core.substrate import _lifetime_jit
+    lifetime_population(BATCH, AGES, TEMPS)  # compile (or hit the cache)
+    c0 = _lifetime_jit._cache_size()
+    lifetime_population(BATCH, AGES + 0.5, TEMPS - 5.0)
+    assert _lifetime_jit._cache_size() == c0

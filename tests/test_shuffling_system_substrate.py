@@ -72,10 +72,13 @@ def test_shuffling_gain_wrapper_routes_through_population():
 def test_shuffling_gain_population_force_ref_matches(monkeypatch):
     """REPRO_FORCE_REF=1 (pure-jnp oracles) == the Pallas interpret path.
     The dispatch mode is a static jit arg, so the env toggle retraces and the
-    ref oracle genuinely runs (same shapes notwithstanding)."""
+    ref oracle genuinely runs (same shapes notwithstanding).  The baseline is
+    pinned to the Pallas path so the toggle is exercised even when the whole
+    session runs ref-forced (the jnp-oracles CI leg)."""
     from repro.core import substrate
     from repro.kernels import ref
     probs = _design_profiles(4, seed=7)
+    monkeypatch.delenv("REPRO_FORCE_REF", raising=False)
     pallas = shuffling_gain_population(probs, seeds=np.arange(4),
                                        n_accesses=111)
     calls = []
