@@ -4,9 +4,10 @@ tracking, not TPU performance — the roofline story lives in EXPERIMENTS.md).
 ``--smoke`` times the tentpoles: one jitted ``profile_population`` sweep over
 a DIMM population vs the legacy per-DIMM NumPy walker, one jitted
 ``shuffling_gain_population`` call vs the per-access ``shuffling_gain_loop``,
-and one jitted ``lifetime_population`` epoch scan vs the per-DIMM Python
-lifecycle ``lifetime_loop``; CI asserts all three stay >= 5x on CPU with
-bit-identical results.
+one jitted ``lifetime_population`` epoch scan vs the per-DIMM Python
+lifecycle ``lifetime_loop``, and one jitted ``recover_mapping_population``
+scramble recovery vs the per-subarray ``estimate_row_mapping`` loop; CI
+asserts all four stay >= 5x on CPU with bit-identical results.
 
     PYTHONPATH=src python benchmarks/kernel_bench.py --smoke
 """
@@ -54,6 +55,9 @@ def kernels():
                       np.float32)
     out["fail_prob_8x512x128_us"] = round(
         _bench(ops.fail_prob, row_src, d_mat, coeffs, cols=128), 1)
+    sig_counts = rng.integers(0, 2 ** 20, (4096, 512)).astype(np.int32)
+    out["bit_signature_4096x512_us"] = round(
+        _bench(ops.bit_signature, sig_counts, nbits=9), 1)
     return out
 
 
@@ -167,6 +171,45 @@ def lifetime_speedup(n_dimms: int = 4, n_epochs: int = 3,
             "results_match": match}
 
 
+def recover_mapping_speedup(n_dimms: int = 24, iters: int = 1) -> dict:
+    """Wall-clock: one jitted ``recover_mapping_population`` call (the blind
+    scramble recovery of the whole population) vs the retained per-subarray
+    ``estimate_row_mapping`` Python loop on the SAME campaign counts —
+    identical work, and the decisions AND confidences must be literally
+    bit-identical (integer votes + host float64 division)."""
+    from repro.core.geometry import SMALL
+    from repro.core.population import make_population
+    from repro.core.substrate import DimmBatch
+    from repro.discovery.blind import campaign_counts
+    from repro.discovery.recover import (recover_mapping_loop,
+                                         recover_mapping_population)
+
+    pop = make_population(SMALL, n_dimms)
+    counts, expected = campaign_counts(pop, DimmBatch.from_population(pop),
+                                       t_ops=(7.5,))
+    counts, expected = counts[0], expected[0]
+
+    recover_mapping_population(counts, expected)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        rec = recover_mapping_population(counts, expected)
+    t_batched = (time.time() - t0) / iters
+
+    t0 = time.time()
+    for _ in range(iters):
+        loop = recover_mapping_loop(counts, expected)
+    t_loop = (time.time() - t0) / iters
+
+    match = all(np.array_equal(rec[k], loop[k]) for k in
+                ("ext_bit", "xor", "confidence", "n_significant_pairs",
+                 "est_ext_to_int"))
+    return {"n_dimms": n_dimms, "n_subarrays": counts.shape[1],
+            "batched_ms": round(t_batched * 1e3, 1),
+            "legacy_loop_ms": round(t_loop * 1e3, 1),
+            "speedup": round(t_loop / max(t_batched, 1e-9), 1),
+            "results_match": match}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -209,6 +252,17 @@ def main() -> None:
     print(f"OK: lifetime_population {lt['speedup']}x faster than the "
           f"Python lifecycle on {lt['n_dimms']} DIMMs x {lt['n_epochs']} "
           f"epochs")
+    rm = recover_mapping_speedup(max(args.dimms, 24))
+    for k, v in rm.items():
+        print(f"recover_mapping_{k},{v}")
+    if not rm["results_match"]:
+        sys.exit("FAIL: batched scramble recovery != per-subarray loop "
+                 "(decisions/confidences must be bit-identical)")
+    if rm["speedup"] < 5.0:
+        sys.exit(f"FAIL: recover speedup {rm['speedup']}x < 5x target")
+    print(f"OK: recover_mapping_population {rm['speedup']}x faster than the "
+          f"per-subarray loop on {rm['n_dimms']} DIMMs x "
+          f"{rm['n_subarrays']} subarrays, bit-identical confidences")
 
 
 if __name__ == "__main__":

@@ -3,22 +3,69 @@
 Prints ``name,us_per_call,derived`` CSV (the derived column is a compact
 key=value report of the figure's quantities vs the paper's claims).
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig18]
+    PYTHONPATH=src python -m benchmarks.run [--only fig18] [--check]
+
+``--check`` validates every emitted row against the CSV schema and exits
+nonzero on the first malformed one — the CI guard that keeps downstream
+scrapers (EXPERIMENTS.md tooling, dashboards) from silently ingesting a
+broken figure row.
 """
 from __future__ import annotations
 
 import argparse
+import re
 import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+_NAME_RE = re.compile(r"^[A-Za-z0-9_.]+$")
+
+
+def validate_row(line: str) -> str | None:
+    """CSV schema check for one emitted row; returns an error string or None.
+
+    Schema: ``name,us_per_call,derived`` — a word-safe name, a nonnegative
+    numeric wall time, and a non-empty derived blob whose first ';'-segment
+    is a key=value pair (later segments may be free text: some figures quote
+    the paper's claim verbatim, semicolons included).
+    """
+    parts = line.split(",", 2)
+    if len(parts) != 3:
+        return f"expected 3 comma fields, got {len(parts)}: {line!r}"
+    name, wall, derived = parts
+    if not _NAME_RE.match(name):
+        return f"malformed name field: {name!r}"
+    try:
+        if float(wall) < 0:
+            return f"negative wall time: {wall!r}"
+    except ValueError:
+        return f"non-numeric wall time: {wall!r}"
+    if not derived:
+        return f"empty derived field: {line!r}"
+    if "=" not in derived.split(";", 1)[0]:
+        return f"derived field without key=value lead: {derived!r}"
+    return None
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="substring filter")
     ap.add_argument("--skip-kernels", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="validate the CSV schema of every emitted row; "
+                         "exit nonzero on a malformed one")
     args = ap.parse_args()
+
+    failures = []
+
+    def emit(line: str) -> None:
+        if args.check:
+            err = validate_row(line)
+            if err:
+                failures.append(err)
+                print(f"MALFORMED ROW: {err}", file=sys.stderr)
+        print(line, flush=True)
 
     from benchmarks.paper_figures import FIGURES
 
@@ -28,12 +75,18 @@ def main() -> None:
             continue
         derived, wall = fn()
         blob = ";".join(f"{k}={v}" for k, v in derived.items())
-        print(f"{name},{wall * 1e6:.0f},{blob}", flush=True)
+        emit(f"{name},{wall * 1e6:.0f},{blob}")
 
     if not args.skip_kernels and (not args.only or "kernel" in args.only):
         from benchmarks.kernel_bench import kernels
         for k, v in kernels().items():
-            print(f"kernel_{k},{v},interpret-mode")
+            emit(f"kernel_{k},{v},backend=interpret-mode")
+
+    if args.check:
+        if failures:
+            sys.exit(f"--check: {len(failures)} malformed row(s)")
+        print("--check: all rows conform to name,us_per_call,derived",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

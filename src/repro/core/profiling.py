@@ -176,17 +176,38 @@ class DivaProfiler:
     computed as ONE jitted device program (``substrate.lifetime_population``);
     ``timing()`` just serves the current epoch's row of the precomputed
     trajectory (the horizon doubles on demand, so retraces stay logarithmic
-    in lifetime length)."""
+    in lifetime length).
+
+    ``discovery`` switches the profiler to blind mode: instead of the
+    geometry-oracle ``"worst"`` region it tests the EXTERNAL row addresses a
+    ``repro.discovery.blind.BlindDiva`` run discovered (either the
+    ``BlindDiscovery`` artifact — matched by this DIMM's serial — or a plain
+    external row-index array).  The DIMM decodes those addresses with its own
+    scramble, exactly as hardware would — the profiler itself never touches
+    the geometry metadata."""
     dimm: DimmModel
     period_steps: int = 1000
     temp_C: float = 55.0
     refresh_ms: float = 64.0
     years_per_period: float = 0.0
+    discovery: object | None = None
     _timings: np.ndarray | None = field(default=None, repr=False)
     _age_base: float | None = field(default=None, repr=False)
     _epoch_base: int = 0
     _cur_epoch: int = field(default=-1, repr=False)
     _step: int = 0
+
+    def _region(self):
+        """Internal test rows: the geometry-oracle worst region, or (blind
+        mode) the discovered EXTERNAL addresses decoded by the DIMM's own
+        scramble — the decode hardware performs on every activate."""
+        if self.discovery is None:
+            return "worst"
+        ext = self.discovery
+        if hasattr(ext, "ext_rows_for"):                 # BlindDiscovery
+            ext = ext.ext_rows_for(self.dimm.serial)
+        return np.asarray(
+            self.dimm.vendor.scramble.ext_to_int(np.asarray(ext)))
 
     def lifecycle(self, n_epochs: int, age_base: float | None = None,
                   diagnostics: bool = False) -> dict:
@@ -200,7 +221,7 @@ class DivaProfiler:
         return lifetime_population(
             DimmBatch.from_population([self.dimm]), ages,
             np.full(n_epochs, self.temp_C), refresh_ms=self.refresh_ms,
-            region="worst", multibit=True, diagnostics=diagnostics)
+            region=self._region(), multibit=True, diagnostics=diagnostics)
 
     def timing(self) -> TimingParams:
         epoch = self._step // self.period_steps

@@ -251,7 +251,10 @@ def _region_eval(batch: DimmBatch, pidx: int, t_op, rows, stress,
     the (D,) host-computed operating-condition term (condition_adders).
     ``t_op`` is a scalar (one grid point for everyone) or a (D,) vector (the
     lifetime sweep testing each DIMM's own previous table); the hash sees the
-    same per-DIMM bits either way.
+    same per-DIMM bits either way.  ``rows`` is a shared (Rr,) internal row
+    region, or a per-DIMM (D, Rr) table — the blind-discovery pipeline tests
+    each DIMM at its own recovered addresses.  The hash never keys on rows,
+    so two regions naming the same internal rows make identical draws.
     """
     g = batch.geom
     R, C, S = g.rows_per_mat, g.cols_per_mat, g.subarrays
@@ -272,7 +275,11 @@ def _region_eval(batch: DimmBatch, pidx: int, t_op, rows, stress,
 
     def per_subarray(acc, s):
         fails_acc, lam_acc = acc
-        rsel = jnp.take(jnp.take(batch.row_src, s, axis=1), rows, axis=1)
+        row_src_s = jnp.take(batch.row_src, s, axis=1)   # (D, R)
+        if rows.ndim == 2:                               # per-DIMM regions
+            rsel = jnp.take_along_axis(row_src_s, rows, axis=1)
+        else:
+            rsel = jnp.take(row_src_s, rows, axis=1)
         rf = rsel.astype(jnp.float32)                    # (D, Rr)
         d_bl = jnp.where(even[None, None, :], rf[:, :, None],
                          (R - 1) - rf[:, :, None]) / (R - 1)   # (D,Rr,C)
@@ -386,7 +393,8 @@ def _run_sharded(name: str, mesh, impl, args, statics: dict,
     args = [jax.tree.map(lambda a: _pad0(a, pad), a) if i in batch_argnums
             else a for i, a in enumerate(args)]
 
-    key = (name, _mesh_key(mesh), tuple(sorted(statics.items())))
+    key = (name, _mesh_key(mesh), tuple(sorted(statics.items())),
+           batch_argnums)
     prog = _SHARD_CACHE.get(key)
     if prog is None:
         in_specs = tuple(P(axis) if i in batch_argnums else P()
@@ -407,7 +415,11 @@ def _dispatch(name: str, mesh, impl, jitted, args, statics: dict,
     return _run_sharded(name, mesh, impl, args, statics, batch_argnums)
 
 
-def _resolve_rows(region, geom: DimmGeometry) -> np.ndarray:
+def _resolve_rows(region, geom: DimmGeometry, n_dimms: int | None = None
+                  ) -> np.ndarray:
+    """Region spec -> internal row indices: the named regions, a shared (Rr,)
+    index array, or a per-DIMM (D, Rr) table (each DIMM tests its own rows —
+    the blind-discovery mode)."""
     if isinstance(region, str):
         if region == "worst":
             return worst_rows_internal(geom)
@@ -415,7 +427,14 @@ def _resolve_rows(region, geom: DimmGeometry) -> np.ndarray:
             return np.arange(geom.rows_per_mat)
         raise ValueError(f"unknown region {region!r}; "
                          "use 'worst', 'all', or an index array")
-    return np.asarray(region)
+    rows = np.asarray(region)
+    if rows.ndim not in (1, 2):
+        raise ValueError(f"region must be (rows,) or (dimms, rows); "
+                         f"got shape {rows.shape}")
+    if rows.ndim == 2 and n_dimms is not None and rows.shape[0] != n_dimms:
+        raise ValueError(f"per-DIMM region has {rows.shape[0]} rows for "
+                         f"{n_dimms} DIMMs")
+    return rows
 
 
 def profile_population_arrays(batch: DimmBatch, *, region: str = "worst",
@@ -428,18 +447,21 @@ def profile_population_arrays(batch: DimmBatch, *, region: str = "worst",
     """(D, 4) profiled timings in PARAMS order; one jitted call for all DIMMs.
 
     ``region="worst"`` is DIVA Profiling (the design-induced slowest rows);
-    ``region="all"`` is conventional every-row profiling.  ``mesh`` shards the
-    DIMM axis over a 1-D device mesh (``sharding.dimm_mesh``) — bit-identical
-    to the single-device path.
+    ``region="all"`` is conventional every-row profiling; a (D, Rr) array
+    gives every DIMM its own internal test rows (blind discovery).  ``mesh``
+    shards the DIMM axis over a 1-D device mesh (``sharding.dimm_mesh``) —
+    bit-identical to the single-device path.
     """
-    rows = _resolve_rows(region, batch.geom)
+    rows = _resolve_rows(region, batch.geom, batch.n_dimms)
     adder = condition_adders(batch, temp_C, refresh_ms)
     args = (batch, jnp.asarray(rows, jnp.int32),
             jnp.asarray(pattern_stress(patterns)), jnp.asarray(adder))
     statics = dict(guard_cycles=guard_cycles, iters=iters,
                    multibit=multibit_only)
+    # a per-DIMM region is batch-shaped: shard it with the DIMM axis
+    argnums = (0, 1, 3) if rows.ndim == 2 else (0, 3)
     out = _dispatch("profile", mesh, _profile_impl, _profile_jit, args,
-                    statics, batch_argnums=(0, 3))
+                    statics, batch_argnums=argnums)
     return np.asarray(out)
 
 
@@ -553,14 +575,15 @@ def lifetime_population(batch: DimmBatch, ages, temps, *,
     evaluations (and their keys) — the cheap timing-only mode the ALDRAM /
     DivaProfiler wrappers use.  ``mesh`` shards the DIMM axis.
     """
-    rows = _resolve_rows(region, batch.geom)
+    rows = _resolve_rows(region, batch.geom, batch.n_dimms)
     adders = lifetime_adders(batch, ages, temps, refresh_ms)     # (E, D)
     args = (batch, jnp.asarray(rows, jnp.int32),
             jnp.asarray(pattern_stress(patterns)), jnp.asarray(adders.T))
     statics = dict(guard_cycles=guard_cycles, iters=iters, multibit=multibit,
                    diagnostics=diagnostics)
+    argnums = (0, 1, 3) if rows.ndim == 2 else (0, 3)
     out = _dispatch("lifetime", mesh, _lifetime_impl, _lifetime_jit, args,
-                    statics, batch_argnums=(0, 3))
+                    statics, batch_argnums=argnums)
     out = [np.asarray(v) for v in out]
     E, D = adders.shape
     # the resolved schedule replays bit-identically: ages are consumed as

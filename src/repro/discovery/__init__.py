@@ -1,0 +1,32 @@
+"""Blind discovery subsystem (layer 3d, see ARCHITECTURE.md).
+
+Population-scale blind characterization: from raw per-row error counts —
+observed through an unknown vendor scramble — to a deployable DIVA timing
+table, without geometry metadata.  Sec 5.3 / Figs 10-11 of the paper.
+
+  * ``signatures``  — batched per-address-bit error signatures
+                      (kernels/bit_signature.py, ``mesh=``-shardable).
+  * ``recover``     — ``recover_mapping_population``: permutation+XOR
+                      scramble recovery over (D, subarrays) as one jitted
+                      program; ``core.mapping.estimate_row_mapping`` is the
+                      bit-identical per-subarray reference.
+  * ``generation``  — cluster DIMMs into design generations by signature
+                      similarity; canonical per-generation vulnerable maps.
+  * ``blind``       — ``BlindDiva``: the end-to-end pipeline (errors ->
+                      recovered mapping -> discovered regions -> restricted
+                      ``profile_population``).
+"""
+from repro.discovery.blind import BlindDiscovery, BlindDiva
+from repro.discovery.generation import (canonical_internal_profiles,
+                                        cluster_generations, vulnerable_rows)
+from repro.discovery.recover import (recover_mapping_loop,
+                                     recover_mapping_population, vote_mapping)
+from repro.discovery.signatures import (bit_signature_population,
+                                        signature_features)
+
+__all__ = [
+    "BlindDiscovery", "BlindDiva", "bit_signature_population",
+    "canonical_internal_profiles", "cluster_generations",
+    "recover_mapping_loop", "recover_mapping_population",
+    "signature_features", "vote_mapping", "vulnerable_rows",
+]

@@ -13,6 +13,7 @@ import os
 import jax
 
 from repro.kernels import ref as _ref
+from repro.kernels.bit_signature import bit_signature as _bs_pallas
 from repro.kernels.fail_prob import fail_prob as _fp_pallas
 from repro.kernels.rc_transient import rc_transient as _rc_pallas
 from repro.kernels.secded import encode_checks as _enc_pallas
@@ -66,6 +67,20 @@ def fail_prob_batch(row_src, d_mat, coeffs, *, cols: int,
     fn = functools.partial(fail_prob, cols=cols, open_bitline=open_bitline,
                            pallas=pallas)
     return jax.vmap(fn, in_axes=(0, None, 0))(row_src, d_mat, coeffs)
+
+
+def bit_signature(counts, *, nbits: int, tile: int | None = None,
+                  pallas: bool | None = None):
+    """(N, R) int32 counts -> (N, nbits) int32 per-bit signature sums.
+    ``pallas=None`` resolves REPRO_FORCE_REF at trace time; jitted callers
+    (``discovery.recover``) pass the resolved bool as a static cache key,
+    per the ``fail_prob`` convention."""
+    if pallas is None:
+        pallas = use_pallas()
+    if not pallas:
+        return _ref.bit_signature(counts, nbits)
+    kw = {} if tile is None else {"tile": tile}
+    return _bs_pallas(counts, nbits=nbits, interpret=interpret_mode(), **kw)
 
 
 def diva_shuffle(bursts, inverse: bool = False, shuffle: bool = True,

@@ -28,6 +28,19 @@ def fail_prob(row_src, d_mat, coeffs, *, cols: int, open_bitline: bool = True):
                       open_bitline)
 
 
+def bit_signature(counts, nbits: int):
+    """(N, R) int32 counts -> (N, nbits) int32 per-address-bit
+    (sum over rows with the bit set) - (sum with it clear) — pure-jnp oracle
+    of kernels/bit_signature.py.  Integer reduction: exact and order
+    independent, so oracle, kernel and the NumPy reference
+    (``core/mapping._signature_sums``) agree value-for-value."""
+    counts = jnp.asarray(counts, jnp.int32)
+    r = jnp.arange(counts.shape[-1], dtype=jnp.int32)
+    pm = ((r[None, :] >> jnp.arange(nbits, dtype=jnp.int32)[:, None]) & 1) \
+        * 2 - 1                                          # (nbits, R) in ±1
+    return jnp.sum(counts[:, None, :] * pm[None, :, :], axis=-1)
+
+
 def secded_encode(data_bits):
     """(N, 64) -> (N, 8) check bits."""
     code = _ecc.encode(data_bits)

@@ -36,9 +36,10 @@ class ClusterSim:
         n = self.n_pods * self.devices_per_pod
         pos = np.arange(n) % self.devices_per_pod
         # design-induced structure: devices farther from the pod-edge switch
-        # pay more on the reduction tree; cross-pod traffic pays the hop.
-        self.design = (pos / self.devices_per_pod) * self.intra_spread_ms \
-            + (np.arange(n) // self.devices_per_pod > 0) * 0.0
+        # pay more on the reduction tree.  The cross-pod hop is modeled as
+        # the global cross_pod_ms term in step_latencies/probe (every step
+        # pays the worst collective's hop), not as a per-device offset.
+        self.design = (pos / self.devices_per_pod) * self.intra_spread_ms
         self.step_count = 0
 
     @property
@@ -61,9 +62,14 @@ class ClusterSim:
         return lat
 
     def probe(self, device: int) -> float:
-        """Probe one device's path (a canary collective on the worst route)."""
+        """Probe one device's path (a canary collective on the worst route).
+        A probed straggler must LOOK like a straggler: injected extras ride
+        the probe exactly as they ride ``step_latencies`` — otherwise a
+        degraded canary device reads healthy and the timeout tracks a
+        fiction."""
         drift = self.step_count / 1000.0 * self.drift_ms_per_kstep
         return float(self.base_ms + self.design[device] + drift
+                     + self.stragglers.get(device, 0.0)
                      + (self.cross_pod_ms if self.n_pods > 1 else 0.0)
                      + abs(self.rng.normal(0, self.noise_ms)))
 
