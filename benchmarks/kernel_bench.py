@@ -5,9 +5,11 @@ tracking, not TPU performance — the roofline story lives in EXPERIMENTS.md).
 a DIMM population vs the legacy per-DIMM NumPy walker, one jitted
 ``shuffling_gain_population`` call vs the per-access ``shuffling_gain_loop``,
 one jitted ``lifetime_population`` epoch scan vs the per-DIMM Python
-lifecycle ``lifetime_loop``, and one jitted ``recover_mapping_population``
-scramble recovery vs the per-subarray ``estimate_row_mapping`` loop; CI
-asserts all four stay >= 5x on CPU with bit-identical results.
+lifecycle ``lifetime_loop``, one jitted ``recover_mapping_population``
+scramble recovery vs the per-subarray ``estimate_row_mapping`` loop, and one
+fused ``memsim.system_speedup_population`` grid vs the retained per-request
+in-order reference walker (``memsim.reference.system_speedup_loop``); CI
+asserts all five stay >= 5x on CPU with bit-identical results.
 
     PYTHONPATH=src python benchmarks/kernel_bench.py --smoke
 """
@@ -58,6 +60,24 @@ def kernels():
     sig_counts = rng.integers(0, 2 ** 20, (4096, 512)).astype(np.int32)
     out["bit_signature_4096x512_us"] = round(
         _bench(ops.bit_signature, sig_counts, nbits=9), 1)
+    sched_args = (rng.integers(0, 16, 8).astype(np.int32),
+                  rng.integers(0, 50, 8).astype(np.int32),
+                  rng.integers(0, 2, 8).astype(np.int32),
+                  rng.integers(0, 400, 8).astype(np.int32),
+                  np.ones(8, bool),
+                  rng.integers(-1, 50, 16).astype(np.int32),
+                  rng.integers(0, 500, 16).astype(np.int32),
+                  rng.integers(-100, 500, 16).astype(np.int32),
+                  rng.integers(0, 500, 2).astype(np.int32),
+                  rng.integers(-100, 400, 2).astype(np.int32),
+                  rng.integers(-100, 400, 2).astype(np.int32),
+                  np.int32(100),
+                  rng.integers(4, 30, (16, 6)).astype(np.int32),
+                  (np.arange(16) % 2).astype(np.int32),
+                  (np.arange(16) % 2).astype(np.int32))
+    out["bank_sched_q8_b16_us"] = round(
+        _bench(ops.bank_sched, *sched_args, tbl=4, trrd=5, tfaw=24,
+               use_bus=True, use_act=True), 1)
     return out
 
 
@@ -210,6 +230,45 @@ def recover_mapping_speedup(n_dimms: int = 24, iters: int = 1) -> dict:
             "results_match": match}
 
 
+def memsim_grid_speedup(n_dimms: int = 3, n_requests: int = 250,
+                        iters: int = 1) -> dict:
+    """Wall-clock: one fused ``memsim.system_speedup_population`` device call
+    (base + D timing tables x all workloads, simulation + in-grid scoring)
+    vs the retained per-request in-order reference walker
+    (``memsim.reference.system_speedup_loop``) on the SAME hash-keyed traces
+    and service rules — identical work, and the per-DIMM speedups must be
+    literally bit-identical (integer latency totals + the shared jitted
+    scorer)."""
+    from repro.memsim import reference, sim
+
+    tabs = np.array([[8.75, 23.75, 8.75, 6.25],
+                     [11.25, 30.0, 11.25, 12.5],
+                     [12.5, 32.5, 12.5, 13.75],
+                     [10.0, 27.5, 10.0, 11.25]])[:n_dimms]
+    kw = dict(n_requests=n_requests, scheduler="inorder")
+
+    sim.system_speedup_population(tabs, **kw)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        fused = sim.system_speedup_population(tabs, **kw)
+    t_batched = (time.time() - t0) / iters
+
+    t0 = time.time()
+    for _ in range(iters):
+        loop = reference.system_speedup_loop(tabs, **kw)
+    t_loop = (time.time() - t0) / iters
+
+    match = (np.array_equal(fused["per_dimm_workload_speedup"],
+                            loop["per_dimm_workload_speedup"])
+             and np.array_equal(fused["per_dimm_speedup"],
+                                loop["per_dimm_speedup"]))
+    return {"n_dimms": n_dimms, "n_requests": n_requests,
+            "batched_ms": round(t_batched * 1e3, 1),
+            "legacy_loop_ms": round(t_loop * 1e3, 1),
+            "speedup": round(t_loop / max(t_batched, 1e-9), 1),
+            "results_match": match}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -263,6 +322,17 @@ def main() -> None:
     print(f"OK: recover_mapping_population {rm['speedup']}x faster than the "
           f"per-subarray loop on {rm['n_dimms']} DIMMs x "
           f"{rm['n_subarrays']} subarrays, bit-identical confidences")
+    ms = memsim_grid_speedup()
+    for k, v in ms.items():
+        print(f"memsim_grid_{k},{v}")
+    if not ms["results_match"]:
+        sys.exit("FAIL: fused memsim grid != per-request in-order reference "
+                 "(speedups must be bit-identical)")
+    if ms["speedup"] < 5.0:
+        sys.exit(f"FAIL: memsim speedup {ms['speedup']}x < 5x target")
+    print(f"OK: memsim system_speedup_population {ms['speedup']}x faster "
+          f"than the per-request reference walker on {ms['n_dimms']} tables, "
+          f"bit-identical speedups")
 
 
 if __name__ == "__main__":

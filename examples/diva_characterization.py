@@ -6,7 +6,11 @@ aging drift (Sec 6.1, one jitted epoch scan), and the blind-discovery
 pipeline (Sec 5.3 deployed: scramble recovery -> generations -> discovered
 regions -> geometry-free DIVA) — printed as ASCII sparklines.
 
-Run:  PYTHONPATH=src python examples/diva_characterization.py
+Run:  PYTHONPATH=src python examples/diva_characterization.py  [--fast]
+
+``--fast`` (or ``main(fast=True)``) runs the same pipeline on a tiny
+population / short lifecycle — the smoke path ``tests/test_examples.py``
+exercises so the walkthrough can't rot.
 """
 import sys
 from pathlib import Path
@@ -26,7 +30,7 @@ def spark(v, width=64):
     return "".join(BARS[min(int(x / hi * (len(BARS) - 1)), len(BARS) - 1)] for x in v)
 
 
-def main():
+def main(fast: bool = False):
     from repro.core.errors import DimmModel, expected_row_profile
     from repro.core.geometry import SMALL
     from repro.core.latency import vendor_models
@@ -70,7 +74,7 @@ def main():
 
     print("\n== Sec 6.1: online re-profiling lifecycle (one jitted scan) ==")
     from repro.core.substrate import DimmBatch, lifetime_population
-    ages = np.linspace(0.0, 10.0, 6).astype(np.float32)
+    ages = np.linspace(0.0, 10.0, 3 if fast else 6).astype(np.float32)
     out = lifetime_population(DimmBatch.from_population([d]), ages,
                               np.full(len(ages), 55.0))
     t = out["timings"][:, 0]  # (E, 4): tRCD, tRAS, tRP, tWR
@@ -82,12 +86,13 @@ def main():
     print(f" read-latency trajectory: {spark(t[:, :3].sum(axis=1), len(ages))}"
           f"  (re-profiling follows the drift)")
 
-    print("\n== Blind discovery: geometry-free DIVA on a 12-DIMM population ==")
     from repro.core.population import make_population
     from repro.core.profiling import DivaProfiler
     from repro.discovery.blind import (BlindDiva, blind_vs_oracle,
                                        campaign_counts)
-    pop = make_population(SMALL, 12)
+    pop = make_population(SMALL, 6 if fast else 12)
+    print(f"\n== Blind discovery: geometry-free DIVA on a "
+          f"{len(pop)}-DIMM population ==")
     batch = DimmBatch.from_population(pop)
     # 1. the error campaign: multi-point reduced-timing sweeps, no geometry
     counts, expected = campaign_counts(pop, batch)
@@ -120,4 +125,4 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    main(fast="--fast" in sys.argv[1:])

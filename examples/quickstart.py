@@ -5,7 +5,10 @@
   3. show DIVA Shuffling turning an uncorrectable burst into a correctable one,
   4. train a small LM whose checkpoints are protected by the same codec.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py  [--fast]
+
+``--fast`` (or ``main(fast=True)``) shrinks the training run — the smoke
+path ``tests/test_examples.py`` exercises so the walkthrough can't rot.
 """
 import sys
 from pathlib import Path
@@ -15,7 +18,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import numpy as np
 
 
-def main():
+def main(fast: bool = False):
     # --- 1/2: DIVA Profiling -------------------------------------------------
     from repro.core.errors import DimmModel
     from repro.core.geometry import SMALL
@@ -31,6 +34,14 @@ def main():
           f"(paper: -35.1%), write -{lr['write_reduction']:.1%} (paper: -57.8%)")
     print(f"[diva-profiling] cost: {profiling_time_s(diva_test_bytes(4 * 2**30)) * 1e3:.2f} ms "
           f"vs conventional {profiling_time_s(4 * 2**30) * 1e3:.0f} ms (512x)")
+
+    # --- 2b: the system-level win (Sec 6.3) ----------------------------------
+    from repro import memsim
+    table = np.asarray([[timing.trcd, timing.tras, timing.trp, timing.twr]])
+    s = memsim.system_speedup_population(
+        table, n_requests=1500 if fast else 8000)
+    print(f"[memsim] FR-FCFS memory system under the profiled table: "
+          f"{s['mean_speedup']:.3f}x mean speedup over standard timings")
 
     # --- 3: DIVA Shuffling ---------------------------------------------------
     from repro.core import shuffling
@@ -53,11 +64,12 @@ def main():
 
     # --- a tiny training run -------------------------------------------------
     from repro.launch.train import main as train_main
-    print("[train] 30 steps of qwen2-0.5b (smoke config):")
-    out = train_main(["--arch", "qwen2-0.5b", "--smoke", "--steps", "30",
+    steps = "8" if fast else "30"
+    print(f"[train] {steps} steps of qwen2-0.5b (smoke config):")
+    out = train_main(["--arch", "qwen2-0.5b", "--smoke", "--steps", steps,
                       "--batch", "8", "--seq", "48", "--log-every", "10"])
     print(f"[train] loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
 
 
 if __name__ == "__main__":
-    main()
+    main(fast="--fast" in sys.argv[1:])

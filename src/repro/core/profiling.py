@@ -184,12 +184,19 @@ class DivaProfiler:
     ``BlindDiscovery`` artifact — matched by this DIMM's serial — or a plain
     external row-index array).  The DIMM decodes those addresses with its own
     scramble, exactly as hardware would — the profiler itself never touches
-    the geometry metadata."""
+    the geometry metadata.
+
+    ``banks > 1`` profiles per-bank tables (subarray groups, see
+    ``substrate.profile_population_arrays``): ``bank_table()`` serves the
+    current epoch's (banks, 4) ns table — what ``memsim``'s FR-FCFS
+    simulator charges per request — while ``timing()`` keeps returning the
+    whole-DIMM-safe envelope (per-parameter max over banks)."""
     dimm: DimmModel
     period_steps: int = 1000
     temp_C: float = 55.0
     refresh_ms: float = 64.0
     years_per_period: float = 0.0
+    banks: int = 1
     discovery: object | None = None
     _timings: np.ndarray | None = field(default=None, repr=False)
     _age_base: float | None = field(default=None, repr=False)
@@ -221,7 +228,8 @@ class DivaProfiler:
         return lifetime_population(
             DimmBatch.from_population([self.dimm]), ages,
             np.full(n_epochs, self.temp_C), refresh_ms=self.refresh_ms,
-            region=self._region(), multibit=True, diagnostics=diagnostics)
+            region=self._region(), multibit=True, diagnostics=diagnostics,
+            banks=self.banks)
 
     def timing(self) -> TimingParams:
         epoch = self._step // self.period_steps
@@ -242,33 +250,55 @@ class DivaProfiler:
                     0 if self._timings is None else 2 * len(self._timings))
             self._timings = self.lifecycle(n, self._age_base)["timings"][:, 0]
         self._step += 1
-        return TimingParams(*(float(v) for v in self._timings[rel]))
+        row = self._timings[rel]
+        if row.ndim == 2:           # per-bank mode: whole-DIMM-safe envelope
+            row = row.max(axis=0)
+        return TimingParams(*(float(v) for v in row))
+
+    def bank_table(self) -> np.ndarray:
+        """(banks, 4) ns table of the epoch most recently served by
+        ``timing()`` — the per-bank operating point the memsim FR-FCFS
+        simulator charges per request (``banks=1`` returns the whole-DIMM
+        row as (1, 4))."""
+        if self._timings is None:
+            raise RuntimeError("call timing() at least once first")
+        return np.atleast_2d(self._timings[self._cur_epoch - self._epoch_base])
 
 
 @dataclass
 class ALDRAM:
     """Static baseline: timing table fixed at install time (age=0); applies a
     temperature bin but cannot see aging (Sec 6.1 / Sec 7)."""
-    table: dict  # temp bin -> TimingParams
+    table: dict  # temp bin -> (banks, 4) ns array in PARAMS order
 
     @classmethod
-    def install(cls, dimm: DimmModel, temps=(55.0, 85.0)) -> "ALDRAM":
+    def install(cls, dimm: DimmModel, temps=(55.0, 85.0),
+                banks: int = 1) -> "ALDRAM":
         # AL-DRAM has no test region concept: we give it the *oracle*
         # min-safe over all rows at install time (the paper's generous
         # assumption for the baseline) but WITHOUT guardband re-profiling.
         # Install is one jitted lifetime scan whose "epochs" are the
         # temperature bins of a zero-aging schedule (ages override the
         # DIMM's age leaf), reproducing conventional_profile per bin.
+        # ``banks > 1`` installs per-bank static tables (subarray groups).
         out = lifetime_population(
             DimmBatch.from_population([dimm]),
             np.zeros(len(temps), np.float32), np.asarray(temps, np.float64),
-            region="all", multibit=False, diagnostics=False)
-        return cls({t: TimingParams(*(float(v) for v in out["timings"][i, 0]))
+            region="all", multibit=False, diagnostics=False, banks=banks)
+        return cls({t: np.atleast_2d(np.asarray(out["timings"][i, 0]))
                     for i, t in enumerate(temps)})
 
+    def _bin(self, temp_C: float):
+        return min(self.table, key=lambda t: abs(t - temp_C))
+
+    def bank_table(self, temp_C: float) -> np.ndarray:
+        """(banks, 4) ns table of the nearest installed temperature bin —
+        the per-bank operating point for the memsim FR-FCFS simulator."""
+        return self.table[self._bin(temp_C)]
+
     def timing(self, temp_C: float) -> TimingParams:
-        key = min(self.table, key=lambda t: abs(t - temp_C))
-        return self.table[key]
+        row = self.table[self._bin(temp_C)].max(axis=0)  # whole-DIMM envelope
+        return TimingParams(*(float(v) for v in row))
 
 
 # ------------------------------------------------------------- reporting

@@ -1,239 +1,41 @@
-"""Ramulator-lite: bank-state DRAM timing simulation + multicore IPC model.
+"""Ramulator-lite — compatibility facade over ``repro.memsim``.
 
-Reproduces the *relative* system speedups of Fig 19 (we have no x86/PinPoints
-traces offline, so workloads are synthetic — see ARCHITECTURE.md for where
-this sits in the layer stack). Workloads are (MPKI, row-hit-rate,
-bank-parallelism) tuples spanning the paper's Stream/SPEC/TPC/GUPS range; a
-``lax.scan`` walks a synthetic request trace through per-bank state (open
-row, ready time, precharge-ready time) under FR-FCFS-ish service rules
-derived from the four timing parameters; IPC follows a standard memory-stall
-model.
+The simulator proper moved to ``src/repro/memsim/`` (layer 4's memory-system
+scale-out: FR-FCFS over channel -> rank -> bank, per-bank DIVA timing tables,
+in-grid IPC).  This module keeps the historical ``core.ramlite`` surface —
+the retained in-order walker (``_sim_one``/``_sim_grid``/``simulate_trace``),
+trace synthesis, the system-evaluation wrappers — with its original
+semantics: ``system_speedup_population`` here runs the in-order service rule
+(``scheduler="inorder"``), exactly the pre-memsim behaviour; use
+``repro.memsim.system_speedup_population`` for the FR-FCFS scheduler and
+per-bank tables.
 
-The simulator is ONE jitted program (``_sim_grid``) vmapped over workloads
-and timing-grid rows: timing parameters enter as traced cycle arrays
-(``timing_cycles``), so sweeping `TimingParams` values — the Sec 6.3
-evaluation, AL-DRAM-style sweeps, per-DIMM profiled populations — never
-retraces.  ``simulate_trace``/``evaluate_system``/``speedup_summary`` are
-thin wrappers; ``system_speedup_population`` maps per-DIMM profiled timings
-to per-DIMM speedups in a single device call.
+Every attribute (including the live ``N_TRACES`` / ``N_TRACE_BUILDS``
+counters of the no-retrace / no-rebuild regression contract) delegates
+lazily to ``repro.memsim.sim`` — lazy both to stay a live view of the
+counters and to break the ``core <-> memsim`` import cycle
+(``memsim.sim`` imports ``core.substrate``, whose package init imports this
+module).
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.timing import (CYCLE_NS, PARAMS, STANDARD, TCL_NS, TCWL_NS,
-                               TimingParams)
-
-CPU_GHZ = 3.2  # Table 1
+from repro.core.timing import STANDARD, TimingParams
 
 
-@dataclass(frozen=True)
-class Workload:
-    name: str
-    mpki: float           # misses (DRAM requests) per kilo-instruction
-    row_hit_rate: float   # fraction of accesses hitting the open row
-    write_frac: float = 0.3
-    ipc_peak: float = 2.0  # IPC with a perfect memory system
-
-
-# A 2-wide-ish OoO core: memory stalls partially overlap (MLP factor).
-MLP_OVERLAP = 0.55
-
-WORKLOADS = [
-    Workload("stream-copy", 28.0, 0.85, 0.45),
-    Workload("stream-triad", 25.0, 0.80, 0.35),
-    Workload("gups", 32.0, 0.05, 0.50, ipc_peak=1.4),
-    Workload("mcf-like", 18.0, 0.30, 0.15, ipc_peak=1.2),
-    Workload("lbm-like", 14.0, 0.65, 0.40),
-    Workload("libquantum-like", 22.0, 0.75, 0.10),
-    Workload("omnetpp-like", 8.0, 0.40, 0.25, ipc_peak=1.6),
-    Workload("tpcc-like", 10.0, 0.35, 0.30, ipc_peak=1.5),
-    Workload("tpch-like", 12.0, 0.55, 0.20),
-    Workload("soplex-like", 16.0, 0.45, 0.25, ipc_peak=1.4),
-    Workload("milc-like", 11.0, 0.60, 0.35),
-    Workload("low-mem", 1.5, 0.50, 0.30, ipc_peak=2.4),
-]
-
-
-def make_trace(w: Workload, n: int, banks: int, seed: int = 0):
-    """Synthetic request trace honouring ``w.row_hit_rate``: an intended hit
-    targets the bank's most recently opened row (the first touch of a bank is
-    always a miss), an intended miss opens a fresh row, so the achieved
-    row-hit rate in the simulator matches the spec up to binomial noise."""
-    rng = np.random.default_rng(seed)
-    bank = rng.integers(0, banks, n)
-    hit = rng.random(n) < w.row_hit_rate
-    row = np.zeros(n, np.int32)
-    for b in range(banks):
-        idx = np.flatnonzero(bank == b)
-        if idx.size == 0:
-            continue
-        h = hit[idx].copy()
-        h[0] = False
-        # row id = running miss count: a miss opens a fresh row, a hit reuses
-        # the id of the bank's last miss (the currently open row)
-        row[idx] = np.cumsum(~h)
-    is_wr = (rng.random(n) < w.write_frac).astype(np.int32)
-    # inter-arrival: requests per cycle from MPKI & peak IPC
-    rate = w.mpki / 1000.0 * w.ipc_peak
-    gaps = rng.geometric(min(rate, 0.99), n).astype(np.int32)
-    arrive = np.cumsum(gaps).astype(np.int32)
-    return {"bank": bank.astype(np.int32), "row": row, "write": is_wr,
-            "arrive": arrive}
-
-
-def timing_cycles(t: TimingParams) -> np.ndarray:
-    """(6,) int32 [tRCD, tRAS, tRP, tWR, tCL, tCWL] in memory-bus cycles —
-    the traced operand of the jitted simulator (values change, no retrace)."""
-    return np.asarray([t.cycles(p) for p in PARAMS]
-                      + [round(TCL_NS / CYCLE_NS), round(TCWL_NS / CYCLE_NS)],
-                      np.int32)
-
-
-# Bumped once per trace of the jitted simulator; the no-retrace contract
-# (sweeping TimingParams VALUES reuses the compiled program) is asserted on
-# this counter in tests.
-N_TRACES = 0
-
-
-def _sim_one(trace, tc, banks: int):
-    """Bank-state walk of one trace under one timing row (bus cycles).
-
-    Write accounting (Sec 6.3): a write's own completion latency is
-    tCWL-based; tWR (write recovery) delays the bank's next PRECHARGE — it is
-    folded into per-bank precharge-ready time, so reduced tWR shows up as
-    throughput via bank occupancy, not as response latency.
-    """
-    tRCD, tRAS, tRP, tWR, tCL, tCWL = (tc[i] for i in range(6))
-
-    def step(state, req):
-        open_row, ready, pre_ready = state
-        b, row, wr, arr = req["bank"], req["row"], req["write"], req["arrive"]
-        start = jnp.maximum(arr, ready[b])
-        hit = open_row[b] == row
-        # row miss: precharge the open row (respecting tRAS-since-activation
-        # and any pending write recovery), then activate
-        pre_ok = jnp.maximum(start, pre_ready[b])
-        t_act = pre_ok + tRP
-        t_col = jnp.where(hit, start, t_act + tRCD)
-        done = t_col + jnp.where(wr == 1, tCWL, tCL)
-        latency = done - arr
-        base_pre = jnp.where(hit, pre_ready[b], t_act + tRAS)
-        new_pre = jnp.maximum(base_pre, jnp.where(wr == 1, done + tWR, base_pre))
-        state = (open_row.at[b].set(row), ready.at[b].set(done),
-                 pre_ready.at[b].set(new_pre))
-        return state, (latency, hit)
-
-    init = (jnp.full((banks,), -1, jnp.int32),
-            jnp.zeros((banks,), jnp.int32),
-            jnp.full((banks,), -(10 ** 6), jnp.int32))
-    _, (lat, hit) = jax.lax.scan(step, init, trace)
-    lat = lat.astype(jnp.float32)
-    return {"avg_latency_cycles": jnp.mean(lat),
-            "p99_latency_cycles": jnp.percentile(lat, 99.0),
-            "row_hit_rate": jnp.mean(hit.astype(jnp.float32))}
-
-
-@functools.partial(jax.jit, static_argnames=("banks",))
-def _sim_grid(traces, timings, *, banks: int):
-    """traces: dict of (W, n) int32; timings: (T, 6) int32 cycle rows.
-    Returns dict of (T, W) metrics — the whole workload x timing grid as one
-    device call."""
-    global N_TRACES
-    N_TRACES += 1
-    per_t = jax.vmap(lambda tr, tc: _sim_one(tr, tc, banks), in_axes=(0, None))
-    return jax.vmap(per_t, in_axes=(None, 0))(traces, timings)
-
-
-def simulate_trace(trace, t: TimingParams, banks: int = 16) -> dict:
-    """Bank-state walk. Latencies in memory-bus cycles (DDR3-1600).
-
-    Retrace-free contract: the jitted core takes ``timing_cycles(t)`` as a
-    traced array, so calls that differ only in `TimingParams` VALUES (same
-    trace length / banks) reuse the compiled program.
-    """
-    traces = {k: jnp.asarray(v, jnp.int32)[None] for k, v in trace.items()}
-    res = _sim_grid(traces, jnp.asarray(timing_cycles(t))[None], banks=banks)
-    return {k: float(v[0, 0]) for k, v in res.items()}
-
-
-def ipc(w: Workload, avg_mem_lat_bus_cycles: float) -> float:
-    """Memory-stall IPC model: CPI = CPI_peak + MPKI/1000 * stall_cycles."""
-    lat_cpu_cycles = avg_mem_lat_bus_cycles * (CPU_GHZ * CYCLE_NS)  # bus -> cpu cycles
-    stall = lat_cpu_cycles * (1.0 - MLP_OVERLAP)
-    cpi = 1.0 / w.ipc_peak + w.mpki / 1000.0 * stall
-    return 1.0 / cpi
-
-
-def weighted_speedup(ipcs_new: list[float], ipcs_base: list[float]) -> float:
-    return float(sum(n / b for n, b in zip(ipcs_new, ipcs_base)))
-
-
-def _stack_traces(n_requests: int, banks: int, seed: int) -> dict:
-    trs = [make_trace(w, n_requests, banks, seed + i)
-           for i, w in enumerate(WORKLOADS)]
-    return {k: jnp.asarray(np.stack([tr[k] for tr in trs])) for k in trs[0]}
-
-
-def evaluate_system_grid(timings, *, n_requests: int = 20000, banks: int = 16,
-                         seed: int = 0) -> np.ndarray:
-    """(T, W) IPC matrix for T timing points over all WORKLOADS — the whole
-    grid (workloads x timing rows) as a single jitted device call."""
-    traces = _stack_traces(n_requests, banks, seed)
-    tcs = jnp.asarray(np.stack([timing_cycles(t) for t in timings]))
-    avg = np.asarray(_sim_grid(traces, tcs, banks=banks)["avg_latency_cycles"])
-    return np.asarray([[ipc(w, avg[ti, wi]) for wi, w in enumerate(WORKLOADS)]
-                       for ti in range(len(timings))])
-
-
-def evaluate_system(t: TimingParams, *, n_requests: int = 20000,
-                    banks: int = 16, seed: int = 0) -> dict:
-    """Per-workload IPC under timing t."""
-    ipcs = evaluate_system_grid([t], n_requests=n_requests, banks=banks,
-                                seed=seed)[0]
-    return {w.name: float(v) for w, v in zip(WORKLOADS, ipcs)}
-
-
-def speedup_summary(t_new: TimingParams, t_base: TimingParams = STANDARD,
-                    cores: int = 4, seed: int = 0, ipcs=None, **kw) -> dict:
-    """``ipcs`` short-circuits the simulation with a precomputed
-    ``evaluate_system_grid([t_base, t_new], ...)`` result — only the
-    ``cores``-dependent mix sampling reruns (used by fig19's core sweep)."""
-    if ipcs is None:
-        ipcs = evaluate_system_grid([t_base, t_new], seed=seed, **kw)
-    base, new = ipcs[0], ipcs[1]
-    names = [w.name for w in WORKLOADS]
-    per_wl = {n: float(new[i] / base[i]) for i, n in enumerate(names)}
-    rng = np.random.default_rng(seed)
-    ws = []
-    for _ in range(32):  # 32 random multi-core mixes (Sec 6.3)
-        mix = rng.choice(len(names), cores)
-        ws.append(weighted_speedup(new[mix], base[mix]) / cores)
-    return {"per_workload_speedup": per_wl,
-            "mean_singlecore_speedup": float(np.mean(list(per_wl.values()))),
-            "mean_weighted_speedup": float(np.mean(ws))}
-
-
-def system_speedup_population(timings, t_base: TimingParams = STANDARD, *,
-                              n_requests: int = 20000, banks: int = 16,
-                              seed: int = 0) -> dict:
+def system_speedup_population(timings, t_base: TimingParams = STANDARD,
+                              **kw) -> dict:
     """Per-DIMM profiled timings -> per-DIMM mean system speedups, one device
-    call for the whole population (base + D timing rows stacked on the grid).
+    call for the whole population — the retained in-order semantics
+    (``memsim.system_speedup_population(scheduler="inorder")``)."""
+    from repro.memsim import sim
+    kw.setdefault("scheduler", "inorder")
+    return sim.system_speedup_population(timings, t_base, **kw)
 
-    ``timings``: sequence of `TimingParams` (e.g. ``profile_population``
-    output) or a (D, 4) ns array in PARAMS order.
-    """
-    tps = [t if isinstance(t, TimingParams) else TimingParams(*map(float, t))
-           for t in timings]
-    ipcs = evaluate_system_grid([t_base, *tps], n_requests=n_requests,
-                                banks=banks, seed=seed)
-    sp = (ipcs[1:] / ipcs[0][None, :]).mean(axis=1)   # (D,) mean over workloads
-    return {"per_dimm_speedup": sp,
-            "mean_speedup": float(sp.mean()),
-            "median_speedup": float(np.median(sp)),
-            "min_speedup": float(sp.min()), "max_speedup": float(sp.max())}
+
+def __getattr__(name: str):
+    from repro.memsim import sim
+    try:
+        return getattr(sim, name)
+    except AttributeError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None

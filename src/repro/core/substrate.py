@@ -113,6 +113,33 @@ def burst_uniform(seed, access, lane, xp=np):
     return (h >> 8).astype(xp.float32) * xp.float32(1.0 / (1 << 24))
 
 
+def trace_uniform(seed, idx, lane, xp=np):
+    """Deterministic uniform in [0, 1) for one per-request trace draw of the
+    ramlite/memsim synthetic workloads — a sibling stream of ``query_uniform``
+    / ``burst_uniform`` with fresh mixing constants (the global-index RNG
+    rule): keyed by (workload stream seed, request index, draw lane), never by
+    batch position, so stacking, sharding, and padding cannot change a trace.
+    """
+    u32 = lambda v: xp.asarray(v, xp.uint32)
+    h = u32(seed) * xp.uint32(_GOLD)
+    h = _mix32(h ^ (u32(idx) * xp.uint32(0xBF58476D)), xp)
+    h = _mix32(h ^ (u32(lane) * xp.uint32(0x94D049BB)), xp)
+    return (h >> 8).astype(xp.float32) * xp.float32(1.0 / (1 << 24))
+
+
+def mix_uniform(seed, draw, core, xp=np):
+    """Deterministic uniform in [0, 1) for one multi-core workload-mix pick of
+    ``ramlite.speedup_summary`` (Sec 6.3's 32 random mixes).  A dedicated hash
+    stream with fresh mixing constants: the mixes no longer share
+    ``default_rng(seed)`` state with trace seeding, so changing the trace
+    configuration cannot silently reshuffle the mixes (and vice versa)."""
+    u32 = lambda v: xp.asarray(v, xp.uint32)
+    h = u32(seed) * xp.uint32(_GOLD)
+    h = _mix32(h ^ (u32(draw) * xp.uint32(0xA0761D65)), xp)
+    h = _mix32(h ^ (u32(core) * xp.uint32(0xE7037ED1)), xp)
+    return (h >> 8).astype(xp.float32) * xp.float32(1.0 / (1 << 24))
+
+
 # ------------------------------------------------------------- the batch
 
 _LEAVES = ("serial", "base", "k_bl", "k_wl", "k_mat", "k_row", "sigma",
@@ -238,26 +265,35 @@ def condition_adders(batch: DimmBatch, temp_C: float,
 # ------------------------------------------------- region failure decisions
 
 def _region_eval(batch: DimmBatch, pidx: int, t_op, rows, stress,
-                 adder, iters: int, multibit: bool):
+                 adder, iters: int, multibit: bool, banks: int = 1):
     """Monte-Carlo region test of the whole batch at one operating point.
 
-    Returns ``(fails, lam_total)``: (D,) bool — does the row region fail the
-    test at t_op — and (D,) f32 — the expected failure count behind the
-    accept/reject draws, summed over subarrays and patterns (the ECC-exposure
-    integrand of the lifetime sweep when ``multibit=True``).
+    Returns ``(fails, lam_total)``: (D, banks) bool — does the row region fail
+    the test at t_op in each bank — and (D, banks) f32 — the expected failure
+    count behind the accept/reject draws, summed over the bank's subarrays and
+    patterns (the ECC-exposure integrand of the lifetime sweep when
+    ``multibit=True``).  ``banks`` (static) partitions the subarray axis into
+    equal contiguous groups — the per-bank profiling mode (FLY-DRAM-style
+    bank heterogeneity); ``banks=1`` is the whole-DIMM reduction, and because
+    each subarray's draws and float32 arithmetic are untouched by the
+    grouping, it reproduces the pre-bank-axis results bit for bit.
 
     Mirrors ``DimmModel.region_has_errors`` op-for-op in float32; subarrays
     ride a lax.scan (memory), patterns/DIMMs are broadcast axes.  ``adder`` is
     the (D,) host-computed operating-condition term (condition_adders).
-    ``t_op`` is a scalar (one grid point for everyone) or a (D,) vector (the
-    lifetime sweep testing each DIMM's own previous table); the hash sees the
-    same per-DIMM bits either way.  ``rows`` is a shared (Rr,) internal row
-    region, or a per-DIMM (D, Rr) table — the blind-discovery pipeline tests
-    each DIMM at its own recovered addresses.  The hash never keys on rows,
-    so two regions naming the same internal rows make identical draws.
+    ``t_op`` is a scalar (one grid point for everyone), a (D,) vector (the
+    lifetime sweep testing each DIMM's own previous table), or a (D, S)
+    per-subarray table (each bank's subarrays tested at that bank's own
+    previous value); the hash sees the same per-DIMM bits in every layout.
+    ``rows`` is a shared (Rr,) internal row region, or a per-DIMM (D, Rr)
+    table — the blind-discovery pipeline tests each DIMM at its own recovered
+    addresses.  The hash never keys on rows or banks, so two regions naming
+    the same internal rows make identical draws.
     """
     g = batch.geom
     R, C, S = g.rows_per_mat, g.cols_per_mat, g.subarrays
+    assert S % banks == 0, (S, banks)
+    subs_per_bank = S // banks
     chips = g.chips
     d_wl, d_mat, even = _geom_consts(g)
 
@@ -267,14 +303,23 @@ def _region_eval(batch: DimmBatch, pidx: int, t_op, rows, stress,
     chip0 = batch.chip_offsets[:, 0]
     t_op = jnp.asarray(t_op, jnp.float32)
     t_q = jnp.round(t_op * 4).astype(jnp.uint32)
+    per_sub_t = t_op.ndim == 2
     per_dimm_t = t_op.ndim == 1
-    t_cell = t_op[:, None, None, None, None] if per_dimm_t else t_op
-    t_hash = t_q[:, None] if per_dimm_t else t_q
+    if per_dimm_t:
+        t_cell_all, t_hash_all = t_op[:, None, None, None, None], t_q[:, None]
+    elif not per_sub_t:
+        t_cell_all, t_hash_all = t_op, t_q
     P = stress.shape[0]
     pat_idx = jnp.arange(P)[None, :]
+    bank_ids = jnp.arange(banks)
 
     def per_subarray(acc, s):
         fails_acc, lam_acc = acc
+        if per_sub_t:                                    # (D, S) tables
+            t_cell = t_op[:, s][:, None, None, None, None]
+            t_hash = t_q[:, s][:, None]
+        else:
+            t_cell, t_hash = t_cell_all, t_hash_all
         row_src_s = jnp.take(batch.row_src, s, axis=1)   # (D, R)
         if rows.ndim == 2:                               # per-DIMM regions
             rsel = jnp.take_along_axis(row_src_s, rows, axis=1)
@@ -304,18 +349,24 @@ def _region_eval(batch: DimmBatch, pidx: int, t_op, rows, stress,
             lam = 2 * iters * chips * p.sum(axis=(2, 3, 4))   # (D,P)
         u = query_uniform(batch.serial[:, None], pidx, t_hash, int(multibit),
                           s, pat_idx, xp=jnp)
-        fails_acc = fails_acc | jnp.any(u < -jnp.expm1(-lam), axis=1)
-        return (fails_acc, lam_acc + lam.sum(axis=1)), None
+        fail_s = jnp.any(u < -jnp.expm1(-lam), axis=1)   # (D,)
+        bank_oh = bank_ids == s // subs_per_bank         # (banks,)
+        fails_acc = fails_acc | (fail_s[:, None] & bank_oh[None, :])
+        lam_acc = lam_acc + lam.sum(axis=1)[:, None] \
+            * bank_oh.astype(jnp.float32)[None, :]
+        return (fails_acc, lam_acc), None
 
     D = batch.serial.shape[0]
-    init = (jnp.zeros(D, bool), jnp.zeros(D, jnp.float32))
+    init = (jnp.zeros((D, banks), bool), jnp.zeros((D, banks), jnp.float32))
     (fails, lam_total), _ = jax.lax.scan(per_subarray, init, jnp.arange(S))
     return fails, lam_total
 
 
 def _sweep_param(batch: DimmBatch, pidx: int, floor, rows, stress, adder,
-                 guard_cycles: int, iters: int, multibit: bool):
-    """lax.scan down one parameter's timing grid; per-DIMM min-safe value.
+                 guard_cycles: int, iters: int, multibit: bool,
+                 banks: int = 1):
+    """lax.scan down one parameter's timing grid; per-(DIMM, bank) min-safe
+    value (``floor`` is (D, banks)).
 
     Reproduces the legacy walker: stop at the first grid point that fails or
     undercuts the floor, keep the last safe value, add the guardband.
@@ -325,33 +376,39 @@ def _sweep_param(batch: DimmBatch, pidx: int, floor, rows, stress, adder,
 
     def step(_, t_op):
         fail, _ = _region_eval(batch, pidx, t_op, rows, stress, adder,
-                               iters, multibit)
+                               iters, multibit, banks)
         return None, fail | (t_op < floor - 1e-9)
 
-    _, stops = jax.lax.scan(step, None, grid)            # (G, D)
+    _, stops = jax.lax.scan(step, None, grid)            # (G, D, banks)
     ok = jnp.cumsum(stops.astype(jnp.int32), axis=0) == 0
-    best = jnp.min(jnp.where(ok, grid[:, None], jnp.inf), axis=0)
+    best = jnp.min(jnp.where(ok, grid[:, None, None], jnp.inf), axis=0)
     best = jnp.where(jnp.isfinite(best), best, std)
     return jnp.minimum(best + guard_cycles * CYCLE_NS, std)
 
 
 def _profile_impl(batch: DimmBatch, rows, stress, adder, *,
-                  guard_cycles: int, iters: int, multibit: bool):
+                  guard_cycles: int, iters: int, multibit: bool,
+                  banks: int = 1):
     """The whole-population sweep: tRCD first, tRAS floored by tRCD + 10 ns
-    (the Section 4 infrastructure constraint), then tRP and tWR."""
+    (the Section 4 infrastructure constraint), then tRP and tWR.  Returns
+    (D, banks, 4): per-bank timing tables when ``banks > 1`` (each bank's
+    sweep sees only its own subarrays' failures, so a bank can settle below
+    the whole-DIMM value — the FLY-DRAM margin), the whole-DIMM sweep at
+    ``banks=1`` (bit-identical to the pre-bank-axis program)."""
     D = batch.serial.shape[0]
-    kw = dict(rows=rows, stress=stress, adder=adder,
+    kw = dict(rows=rows, stress=stress, adder=adder, banks=banks,
               guard_cycles=guard_cycles, iters=iters, multibit=multibit)
-    floor5 = jnp.full((D,), 5.0, jnp.float32)
+    floor5 = jnp.full((D, banks), 5.0, jnp.float32)
     trcd = _sweep_param(batch, 0, floor5, **kw)
     tras = _sweep_param(batch, 1, trcd + 10.0, **kw)
     trp = _sweep_param(batch, 2, floor5, **kw)
     twr = _sweep_param(batch, 3, floor5, **kw)
-    return jnp.stack([trcd, tras, trp, twr], axis=1)
+    return jnp.stack([trcd, tras, trp, twr], axis=2)
 
 
 _profile_jit = functools.partial(
-    jax.jit, static_argnames=("guard_cycles", "iters", "multibit"))(_profile_impl)
+    jax.jit, static_argnames=("guard_cycles", "iters", "multibit",
+                              "banks"))(_profile_impl)
 
 
 # ------------------------------------------------- DIMM-axis sharded dispatch
@@ -443,26 +500,36 @@ def profile_population_arrays(batch: DimmBatch, *, region: str = "worst",
                               multibit_only: bool = False,
                               patterns=DEFAULT_PATTERNS,
                               iters: int = DEFAULT_ITERS,
-                              mesh=None) -> np.ndarray:
+                              banks: int = 1, mesh=None) -> np.ndarray:
     """(D, 4) profiled timings in PARAMS order; one jitted call for all DIMMs.
 
     ``region="worst"`` is DIVA Profiling (the design-induced slowest rows);
     ``region="all"`` is conventional every-row profiling; a (D, Rr) array
-    gives every DIMM its own internal test rows (blind discovery).  ``mesh``
-    shards the DIMM axis over a 1-D device mesh (``sharding.dimm_mesh``) —
-    bit-identical to the single-device path.
+    gives every DIMM its own internal test rows (blind discovery).
+    ``banks > 1`` partitions the subarray axis into that many equal bank
+    groups and returns per-bank tables, shape (D, banks, 4): each bank is
+    profiled against only its own subarrays, so its table is <= the
+    whole-DIMM table entry-wise (the bank-heterogeneity margin FLY-DRAM
+    exploits); ``banks=1`` (the whole-DIMM reduction) stays (D, 4) and
+    bit-identical to the pre-bank-axis results.  ``mesh`` shards the DIMM
+    axis over a 1-D device mesh (``sharding.dimm_mesh``) — bit-identical to
+    the single-device path.
     """
+    if batch.geom.subarrays % banks != 0:
+        raise ValueError(f"banks={banks} must divide "
+                         f"subarrays={batch.geom.subarrays}")
     rows = _resolve_rows(region, batch.geom, batch.n_dimms)
     adder = condition_adders(batch, temp_C, refresh_ms)
     args = (batch, jnp.asarray(rows, jnp.int32),
             jnp.asarray(pattern_stress(patterns)), jnp.asarray(adder))
     statics = dict(guard_cycles=guard_cycles, iters=iters,
-                   multibit=multibit_only)
+                   multibit=multibit_only, banks=banks)
     # a per-DIMM region is batch-shaped: shard it with the DIMM axis
     argnums = (0, 1, 3) if rows.ndim == 2 else (0, 3)
     out = _dispatch("profile", mesh, _profile_impl, _profile_jit, args,
                     statics, batch_argnums=argnums)
-    return np.asarray(out)
+    out = np.asarray(out)
+    return out[:, 0] if banks == 1 else out
 
 
 def profile_population(batch: DimmBatch, **kw) -> list[TimingParams]:
@@ -504,13 +571,13 @@ def lifetime_adders(batch: DimmBatch, ages, temps,
 
 def _lifetime_impl(batch: DimmBatch, rows, stress, adders_dl, *,
                    guard_cycles: int, iters: int, multibit: bool,
-                   diagnostics: bool):
+                   diagnostics: bool, banks: int = 1):
     """One ``lax.scan`` over profiling epochs.  ``adders_dl`` is (D, E) —
     DIMM-leading so the sharded runner can split dim 0 like every other arg;
     the scan walks the epoch axis.
 
     Each epoch re-runs the full DIVA sweep under that epoch's conditions;
-    with ``diagnostics`` it additionally reports, per DIMM:
+    with ``diagnostics`` it additionally reports, per (DIMM, bank):
       * ``stale``: would the PREVIOUS epoch's table (the standard table at
         epoch 0) now fail the region test — the aging-drift unsafety that
         static AL-DRAM-style tables accumulate (Sec 6.1 fn 2);
@@ -520,44 +587,57 @@ def _lifetime_impl(batch: DimmBatch, rows, stress, adders_dl, *,
     Without it the epoch body is just the sweep — what the timing-only
     wrappers (ALDRAM.install, DivaProfiler) pay for.
 
-    Returns DIMM-leading trajectories: (D, E, 4), (D, E) bool, (D, E) f32
-    — or only the timings when ``diagnostics`` is off.
+    ``banks > 1`` threads the per-bank table axis through the whole
+    lifecycle: each epoch profiles (D, banks, 4) tables and the stale test
+    evaluates every bank's subarrays at that bank's own previous value.
+
+    Returns DIMM-leading trajectories: (D, E, banks, 4), (D, E, banks) bool,
+    (D, E, banks) f32 — or only the timings when ``diagnostics`` is off.
     """
     D = batch.serial.shape[0]
+    S = batch.geom.subarrays
+    sub_bank = jnp.asarray(np.arange(S) // (S // banks), jnp.int32)
     std = jnp.asarray([getattr(STANDARD, p) for p in PARAMS], jnp.float32)
     kw = dict(rows=rows, stress=stress, guard_cycles=guard_cycles,
-              iters=iters, multibit=multibit)
+              iters=iters, multibit=multibit, banks=banks)
 
     def epoch(prev_t, adder):
-        t_new = _profile_impl(batch, adder=adder, **kw)          # (D, 4)
+        t_new = _profile_impl(batch, adder=adder, **kw)      # (D, banks, 4)
         if not diagnostics:
             return t_new, (t_new,)
-        stale = jnp.zeros(D, bool)
-        ecc = jnp.zeros(D, jnp.float32)
+        stale = jnp.zeros((D, banks), bool)
+        ecc = jnp.zeros((D, banks), jnp.float32)
         for p in range(len(PARAMS)):
-            fail_p, _ = _region_eval(batch, p, prev_t[:, p], rows, stress,
-                                     adder, iters, multibit)
+            # each subarray is tested at ITS bank's table value: expand the
+            # (D, banks) per-bank column to a (D, S) per-subarray table
+            # (for banks=1 this carries the same per-DIMM values as before,
+            # so every draw and decision is unchanged)
+            prev_s = jnp.take(prev_t[:, :, p], sub_bank, axis=1)
+            fail_p, _ = _region_eval(batch, p, prev_s, rows, stress,
+                                     adder, iters, multibit, banks)
             stale = stale | fail_p
-            _, lam_p = _region_eval(batch, p, t_new[:, p], rows, stress,
-                                    adder, iters, True)
+            new_s = jnp.take(t_new[:, :, p], sub_bank, axis=1)
+            _, lam_p = _region_eval(batch, p, new_s, rows, stress,
+                                    adder, iters, True, banks)
             ecc = ecc + lam_p
         return t_new, (t_new, stale, ecc)
 
-    init = jnp.broadcast_to(std, (D, len(PARAMS)))
+    init = jnp.broadcast_to(std, (D, banks, len(PARAMS)))
     _, ys = jax.lax.scan(epoch, init, adders_dl.T)
     return tuple(jnp.moveaxis(y, 0, 1) for y in ys)
 
 
 _lifetime_jit = functools.partial(
     jax.jit, static_argnames=("guard_cycles", "iters", "multibit",
-                              "diagnostics"))(_lifetime_impl)
+                              "diagnostics", "banks"))(_lifetime_impl)
 
 
 def lifetime_population(batch: DimmBatch, ages, temps, *,
                         refresh_ms: float = 64.0, region: str = "worst",
                         guard_cycles: int = 1, multibit: bool = True,
                         patterns=DEFAULT_PATTERNS, iters: int = DEFAULT_ITERS,
-                        diagnostics: bool = True, mesh=None) -> dict:
+                        diagnostics: bool = True, banks: int = 1,
+                        mesh=None) -> dict:
     """The whole online re-profiling lifecycle as ONE device program.
 
     ``ages`` / ``temps`` give each profiling epoch's operating point ((E,) or
@@ -571,20 +651,29 @@ def lifetime_population(batch: DimmBatch, ages, temps, *,
     ``stale_fail`` (E, D) bool (previous epoch's table — standard at epoch 0
     — now fails the region test), ``ecc_lambda`` (E, D) expected multi-bit
     codewords at the fresh operating point, plus the resolved (E, D)
-    ``ages``/``temps`` schedule.  ``diagnostics=False`` skips the stale/ECC
-    evaluations (and their keys) — the cheap timing-only mode the ALDRAM /
-    DivaProfiler wrappers use.  ``mesh`` shards the DIMM axis.
+    ``ages``/``temps`` schedule.  ``banks > 1`` threads per-bank tables
+    through every epoch (see ``profile_population_arrays``): ``timings``
+    becomes (E, D, banks, 4) and the diagnostics (E, D, banks), with each
+    bank's stale test run at that bank's own previous value.
+    ``diagnostics=False`` skips the stale/ECC evaluations (and their keys) —
+    the cheap timing-only mode the ALDRAM / DivaProfiler wrappers use.
+    ``mesh`` shards the DIMM axis.
     """
+    if batch.geom.subarrays % banks != 0:
+        raise ValueError(f"banks={banks} must divide "
+                         f"subarrays={batch.geom.subarrays}")
     rows = _resolve_rows(region, batch.geom, batch.n_dimms)
     adders = lifetime_adders(batch, ages, temps, refresh_ms)     # (E, D)
     args = (batch, jnp.asarray(rows, jnp.int32),
             jnp.asarray(pattern_stress(patterns)), jnp.asarray(adders.T))
     statics = dict(guard_cycles=guard_cycles, iters=iters, multibit=multibit,
-                   diagnostics=diagnostics)
+                   diagnostics=diagnostics, banks=banks)
     argnums = (0, 1, 3) if rows.ndim == 2 else (0, 3)
     out = _dispatch("lifetime", mesh, _lifetime_impl, _lifetime_jit, args,
                     statics, batch_argnums=argnums)
-    out = [np.asarray(v) for v in out]
+    # drop the bank axis in whole-DIMM mode (timings (D,E,1,4) -> (D,E,4))
+    sq = (lambda a: a[:, :, 0]) if banks == 1 else (lambda a: a)
+    out = [np.asarray(sq(v)) for v in out]
     E, D = adders.shape
     # the resolved schedule replays bit-identically: ages are consumed as
     # f32, temps as f64 — echo each at its consumed precision

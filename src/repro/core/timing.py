@@ -15,6 +15,17 @@ TCL_NS = 13.75  # CAS latency, fixed (not swept by the paper)
 TCWL_NS = 10.0  # CAS write latency (DDR3-1600 CWL=8), fixed like tCL
 PARAMS = ("trcd", "tras", "trp", "twr")
 
+# Inter-command constraints consumed by the FR-FCFS memory-system simulator
+# (repro.memsim): not swept by the paper's per-DIMM profiling, fixed at the
+# DDR3-1600 datasheet values like tCL/tCWL.
+TBL_NS = 5.0    # BL8 data-burst occupancy of the channel bus (4 bus clocks)
+TRRD_NS = 6.0   # min ACTIVATE->ACTIVATE gap within a rank
+TFAW_NS = 30.0  # four-activate window per rank
+
+TBL_CYCLES = round(TBL_NS / CYCLE_NS)
+TRRD_CYCLES = round(TRRD_NS / CYCLE_NS)
+TFAW_CYCLES = round(TFAW_NS / CYCLE_NS)
+
 
 @dataclass(frozen=True)
 class TimingParams:

@@ -13,6 +13,7 @@ import os
 import jax
 
 from repro.kernels import ref as _ref
+from repro.kernels.bank_sched import bank_sched as _sched_pallas
 from repro.kernels.bit_signature import bit_signature as _bs_pallas
 from repro.kernels.fail_prob import fail_prob as _fp_pallas
 from repro.kernels.rc_transient import rc_transient as _rc_pallas
@@ -81,6 +82,19 @@ def bit_signature(counts, *, nbits: int, tile: int | None = None,
         return _ref.bit_signature(counts, nbits)
     kw = {} if tile is None else {"tile": tile}
     return _bs_pallas(counts, nbits=nbits, interpret=interpret_mode(), **kw)
+
+
+def bank_sched(*args, pallas: bool | None = None, **kw):
+    """FR-FCFS candidate scoring + projected service times for one scheduler
+    step of the memsim grid (see kernels/bank_sched.py for shapes).
+    ``pallas=None`` resolves REPRO_FORCE_REF at trace time; the jitted memsim
+    simulators pass the resolved bool as a static cache key, per the
+    ``fail_prob`` convention."""
+    if pallas is None:
+        pallas = use_pallas()
+    if not pallas:
+        return _ref.bank_sched(*args, **kw)
+    return _sched_pallas(*args, interpret=interpret_mode(), **kw)
 
 
 def diva_shuffle(bursts, inverse: bool = False, shuffle: bool = True,

@@ -28,6 +28,25 @@ def fail_prob(row_src, d_mat, coeffs, *, cols: int, open_bitline: bool = True):
                       open_bitline)
 
 
+def bank_sched(q_bank, q_row, q_write, q_arrive, q_valid,
+               open_row, ready, pre_ready, bus_ready, last_act, faw_old,
+               t_now, tc, bank_rank, bank_chan, *,
+               tbl: int, trrd: int, tfaw: int, use_bus: bool, use_act: bool):
+    """FR-FCFS candidate scoring — pure-jnp oracle of the Pallas kernel in
+    kernels/bank_sched.py (same ``candidate_times`` formula helper; all-int32
+    arithmetic, so oracle, kernel, and the NumPy reference walker in
+    memsim/reference.py agree value-for-value)."""
+    from repro.kernels.bank_sched import candidate_times
+    i32 = lambda v: jnp.asarray(v, jnp.int32)
+    return candidate_times(
+        i32(q_bank), i32(q_row), i32(q_write), i32(q_arrive),
+        jnp.asarray(q_valid).astype(bool), i32(open_row), i32(ready),
+        i32(pre_ready), i32(bus_ready), i32(last_act), i32(faw_old),
+        i32(t_now).reshape(()), i32(tc), i32(bank_rank), i32(bank_chan),
+        tbl=tbl, trrd=trrd, tfaw=tfaw, use_bus=use_bus, use_act=use_act,
+        xp=jnp)
+
+
 def bit_signature(counts, nbits: int):
     """(N, R) int32 counts -> (N, nbits) int32 per-address-bit
     (sum over rows with the bit set) - (sum with it clear) — pure-jnp oracle

@@ -1,0 +1,22 @@
+"""Memory-system simulator: channel -> rank -> bank FR-FCFS scheduling on
+top of the per-bank DIVA timing tables (see ARCHITECTURE.md layer 4).
+
+``sim`` holds the jitted simulators (the retained in-order walker and the
+FR-FCFS grid); ``reference`` the per-request NumPy walkers the jitted paths
+reproduce bit for bit.
+"""
+from repro.memsim.sim import (CPU_GHZ, MLP_OVERLAP, WORKLOADS, MemSimConfig,
+                              Workload, evaluate_system, evaluate_system_grid,
+                              inorder_config, ipc, make_trace, make_trace_loop,
+                              simulate, simulate_trace, speedup_summary,
+                              system_speedup_population, timing_cycles,
+                              timing_cycles_banks, weighted_speedup)
+from repro.memsim import reference
+
+__all__ = [
+    "CPU_GHZ", "MLP_OVERLAP", "WORKLOADS", "MemSimConfig", "Workload",
+    "evaluate_system", "evaluate_system_grid", "inorder_config", "ipc",
+    "make_trace", "make_trace_loop", "reference", "simulate",
+    "simulate_trace", "speedup_summary", "system_speedup_population",
+    "timing_cycles", "timing_cycles_banks", "weighted_speedup",
+]

@@ -1,0 +1,132 @@
+"""Per-request NumPy walkers — the retained references of the jitted memsim
+simulators (the ``*_loop`` convention).
+
+``simulate_trace_loop`` walks one trace through the FR-FCFS scheduler one
+serviced request per Python step, calling the SAME ``candidate_times``
+formula helper (``kernels/bank_sched.py``) with ``xp=np``; all-int32
+arithmetic plus the shared ``_reduce_metrics`` / ``ipc32`` float32 reductions
+make it bit-identical to the jitted ``lax.scan`` — the parity contract of
+``tests/test_memsim.py`` and the ``kernel_bench --smoke`` memsim gate.
+
+``system_speedup_loop`` is the per-DIMM Python evaluation the fused
+``system_speedup_population`` device call is benchmarked against.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.timing import STANDARD, TimingParams
+from repro.kernels.bank_sched import candidate_times
+from repro.memsim.sim import (WORKLOADS, MemSimConfig, _bank_maps,
+                              _reduce_metrics, _resolve_tables, _score_jit,
+                              _wl_consts, inorder_config, make_trace,
+                              timing_cycles_banks)
+
+_BIG = 2 ** 30
+_NEG = np.int32(-(10 ** 6))
+
+
+def _walk(trace, tc_banks, cfg: MemSimConfig):
+    """The per-request scheduler walk; returns (latency, hit) int32 arrays in
+    service order — the exact mirror of ``sim._scan_sim``."""
+    n = len(trace["bank"])
+    Q = min(cfg.queue, n)
+    bank_rank, bank_chan = _bank_maps(cfg)
+    tr = {k: np.asarray(v, np.int32) for k, v in trace.items()}
+    q = {k: tr[k][:Q].copy() for k in ("bank", "row", "write", "arrive")}
+    q_idx = np.arange(Q, dtype=np.int32)
+    q_valid = np.ones(Q, bool)
+    open_row = np.full(cfg.banks, -1, np.int32)
+    ready = np.zeros(cfg.banks, np.int32)
+    pre_ready = np.full(cfg.banks, _NEG, np.int32)
+    bus_ready = np.zeros(cfg.channels, np.int32)
+    last_act = np.full(cfg.ranks, _NEG, np.int32)
+    faw = np.full((cfg.ranks, 4), _NEG, np.int32)
+    t_now = np.int32(0)
+    nxt = Q
+    out_lat = np.empty(n, np.int32)
+    out_hit = np.empty(n, np.int32)
+    kkw = dict(tbl=cfg.tbl, trrd=cfg.trrd, tfaw=cfg.tfaw,
+               use_bus=cfg.bus, use_act=cfg.act_window, xp=np)
+
+    for step in range(n):
+        key, hit, t_act, t_col, done, new_pre, lat = candidate_times(
+            q["bank"], q["row"], q["write"], q["arrive"], q_valid,
+            open_row, ready, pre_ready, bus_ready, last_act, faw[:, 0],
+            t_now, tc_banks, bank_rank, bank_chan, **kkw)
+        c1 = key == key.max()
+        arr_m = np.where(c1, q["arrive"], _BIG)
+        c2 = c1 & (q["arrive"] == arr_m.min())
+        w = int(np.argmin(np.where(c2, q_idx, _BIG)))
+        wb = int(q["bank"][w])
+        out_lat[step], out_hit[step] = lat[w], hit[w]
+        open_row[wb] = q["row"][w]
+        ready[wb] = done[w]
+        pre_ready[wb] = new_pre[w]
+        if cfg.bus:
+            bus_ready[bank_chan[wb]] = done[w]
+        if cfg.act_window and hit[w] == 0:
+            r = bank_rank[wb]
+            last_act[r] = max(int(last_act[r]), int(t_act[w]))
+            faw[r] = np.sort(np.concatenate([faw[r, 1:], t_act[w:w + 1]]))
+        t_now = np.maximum(t_now, t_col[w])
+        src = min(nxt, n - 1)
+        for k in q:
+            q[k][w] = tr[k][src]
+        q_idx[w] = nxt
+        q_valid[w] = nxt < n
+        nxt += 1
+    return out_lat, out_hit
+
+
+def simulate_trace_loop(trace, timing, *,
+                        config: MemSimConfig | None = None) -> dict:
+    """NumPy reference of ``memsim.simulate``: same metrics dict, bit for
+    bit (int32 walk + the shared float32 reductions)."""
+    cfg = MemSimConfig() if config is None else config
+    lat, hit = _walk(trace, timing_cycles_banks(timing, cfg.banks), cfg)
+    return {k: (float(v) if v.dtype != np.int32 else int(v))
+            for k, v in _reduce_metrics(lat, hit, np).items()}
+
+
+def system_speedup_loop(timings, t_base: TimingParams = STANDARD, *,
+                        n_requests: int = 20000, banks: int = 16,
+                        seed: int = 0, scheduler: str = "inorder",
+                        config: MemSimConfig | None = None) -> dict:
+    """Per-DIMM Python loop reference of
+    ``memsim.system_speedup_population``: every (DIMM table, workload) pair
+    walked per request on the host, identical work and bit-identical
+    speedups, minus the batching + jit.  The parity surface is the exact
+    integer latency totals of the walk; both this loop and the fused path
+    score them through the ONE shared ``_score_jit`` program (see
+    ``sim.ipc32``: XLA CPU FMA-contracts the IPC model's float ops below the
+    HLO level, differently per compilation, so bit-parity is only sound on
+    integers + a shared compiled scorer)."""
+    if config is not None:
+        cfg = config
+    elif scheduler == "frfcfs":
+        cfg = MemSimConfig(banks=banks)
+    elif scheduler == "inorder":
+        cfg = inorder_config(banks)
+    else:
+        raise ValueError(f"unknown scheduler {scheduler!r}")
+    tables = _resolve_tables(timings)
+    mpki1k, inv_peak = _wl_consts()
+    traces = [make_trace(w, n_requests, cfg.banks, seed + i)
+              for i, w in enumerate(WORKLOADS)]
+
+    def totals_row(table):
+        tc = timing_cycles_banks(table, cfg.banks)
+        return np.asarray([_reduce_metrics(*_walk(tr, tc, cfg), np)
+                           ["total_latency_cycles"] for tr in traces],
+                          np.int32)
+
+    totals = np.stack([totals_row(t_base)] + [totals_row(t) for t in tables])
+    _, ratios = _score_jit(totals, mpki1k, inv_peak, n=n_requests)
+    ratios = np.asarray(ratios)                                  # (D, W) f32
+    sp = ratios.astype(np.float64).mean(axis=1)
+    return {"per_dimm_speedup": sp,
+            "per_dimm_workload_speedup": ratios,
+            "mean_speedup": float(sp.mean()),
+            "median_speedup": float(np.median(sp)),
+            "min_speedup": float(sp.min()), "max_speedup": float(sp.max())}

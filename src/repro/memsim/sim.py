@@ -1,0 +1,650 @@
+"""Memory-system simulator: FR-FCFS over channel -> rank -> bank + IPC model.
+
+Reproduces the *relative* system speedups of Fig 19 (we have no x86/PinPoints
+traces offline, so workloads are synthetic — see ARCHITECTURE.md for where
+this sits in the layer stack).  Workloads are (MPKI, row-hit-rate,
+write-fraction) tuples spanning the paper's Stream/SPEC/TPC/GUPS range; every
+per-request draw comes from the ``trace_uniform`` counter hash (the
+global-index RNG rule), so traces are pure functions of (seed, request index)
+and batching/sharding/padding cannot change them.
+
+Two simulators share one service-rule formula (``kernels/bank_sched.py``):
+
+  * the retained in-order walker (``_sim_one``/``_sim_grid``/
+    ``simulate_trace``) — the pre-memsim ``core/ramlite.py`` scheduler, kept
+    as the reference semantics (and re-exported by ``core.ramlite``);
+  * the FR-FCFS grid — a bounded request queue arbitrated row-hit-first /
+    oldest-first, data-bus contention (tBL per channel) and activation
+    constraints (tRRD/tFAW per rank) on top of the bank-state rules, with
+    every request charged its own bank's timing row (per-bank DIVA tables).
+    One jitted ``lax.scan`` whose per-step candidate scoring/ready-time
+    computation is the ``kernels/bank_sched.py`` Pallas kernel (oracle in
+    ``kernels/ref.py``, dispatch in ``kernels/ops.py``).  With
+    ``queue=1`` and the bus/activation constraints off it degenerates to the
+    in-order walker request for request — the ``inorder_config`` compat mode
+    (asserted bit-identical in tests/test_memsim.py).
+
+The IPC/stall model runs INSIDE the jitted grid (float32, one fixed op
+order shared with the NumPy reference walker), so no O(D*W) host loop
+survives; ``system_speedup_population`` evaluates (base + D timing tables) x
+workloads as one device call and takes ``mesh=`` for DIMM-axis sharding via
+``substrate._run_sharded`` (traces are replicated, tables sharded; the
+trace hash keys on global request indices, so sharded/padded runs are
+bit-identical to single-device).  Timing parameters enter as traced cycle
+arrays, so sweeping table VALUES never retraces (the ``N_TRACES`` contract).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.substrate import _dispatch, mix_uniform, trace_uniform
+from repro.core.timing import (CYCLE_NS, PARAMS, STANDARD, TBL_CYCLES,
+                               TCL_NS, TCWL_NS, TFAW_CYCLES, TRRD_CYCLES,
+                               TimingParams)
+
+CPU_GHZ = 3.2  # Table 1
+
+
+@dataclass(frozen=True)
+class Workload:
+    name: str
+    mpki: float           # misses (DRAM requests) per kilo-instruction
+    row_hit_rate: float   # fraction of accesses hitting the open row
+    write_frac: float = 0.3
+    ipc_peak: float = 2.0  # IPC with a perfect memory system
+
+
+# A 2-wide-ish OoO core: memory stalls partially overlap (MLP factor).
+MLP_OVERLAP = 0.55
+
+WORKLOADS = [
+    Workload("stream-copy", 28.0, 0.85, 0.45),
+    Workload("stream-triad", 25.0, 0.80, 0.35),
+    Workload("gups", 32.0, 0.05, 0.50, ipc_peak=1.4),
+    Workload("mcf-like", 18.0, 0.30, 0.15, ipc_peak=1.2),
+    Workload("lbm-like", 14.0, 0.65, 0.40),
+    Workload("libquantum-like", 22.0, 0.75, 0.10),
+    Workload("omnetpp-like", 8.0, 0.40, 0.25, ipc_peak=1.6),
+    Workload("tpcc-like", 10.0, 0.35, 0.30, ipc_peak=1.5),
+    Workload("tpch-like", 12.0, 0.55, 0.20),
+    Workload("soplex-like", 16.0, 0.45, 0.25, ipc_peak=1.4),
+    Workload("milc-like", 11.0, 0.60, 0.35),
+    Workload("low-mem", 1.5, 0.50, 0.30, ipc_peak=2.4),
+]
+
+
+@dataclass(frozen=True)
+class MemSimConfig:
+    """Static memory-system shape + scheduler knobs (hashable: it keys the
+    jit caches and the sharded-program cache).
+
+    Bank b lives on channel ``b % channels`` and rank ``(b // channels) %
+    ranks``.  ``bus`` enables tBL data-bus serialization per channel;
+    ``act_window`` enables the tRRD/tFAW activation constraints per rank.
+    """
+    banks: int = 16
+    ranks: int = 2
+    channels: int = 2
+    queue: int = 8
+    bus: bool = True
+    act_window: bool = True
+    tbl: int = TBL_CYCLES
+    trrd: int = TRRD_CYCLES
+    tfaw: int = TFAW_CYCLES
+
+
+def inorder_config(banks: int = 16) -> MemSimConfig:
+    """The compat mode: a 1-deep queue with bus/activation constraints off
+    degenerates FR-FCFS to the retained in-order walker, request for
+    request."""
+    return MemSimConfig(banks=banks, ranks=1, channels=1, queue=1,
+                        bus=False, act_window=False)
+
+
+def _bank_maps(cfg: MemSimConfig):
+    b = np.arange(cfg.banks)
+    return (((b // cfg.channels) % cfg.ranks).astype(np.int32),   # rank
+            (b % cfg.channels).astype(np.int32))                  # channel
+
+
+# ------------------------------------------------------------------ traces
+
+def _rows_from_loop(bank: np.ndarray, hit: np.ndarray,
+                    banks: int) -> np.ndarray:
+    """Per-bank Python loop (the retained reference): row id = running miss
+    count within the bank — a miss opens a fresh row, a hit reuses the id of
+    the bank's last miss; the first touch of a bank is always a miss."""
+    row = np.zeros(len(bank), np.int32)
+    for b in range(banks):
+        idx = np.flatnonzero(bank == b)
+        if idx.size == 0:
+            continue
+        h = hit[idx].copy()
+        h[0] = False
+        row[idx] = np.cumsum(~h)
+    return row
+
+
+def _rows_from(bank: np.ndarray, hit: np.ndarray) -> np.ndarray:
+    """Grouped-cumsum vectorization of ``_rows_from_loop``: stable-sort by
+    bank, force each group's first element to a miss, inclusive-cumsum the
+    misses, subtract each group's pre-start total, scatter back.  Exact
+    integer arithmetic — identical to the loop for every trace."""
+    n = len(bank)
+    order = np.argsort(bank, kind="stable")
+    miss = ~hit[order]
+    first = np.empty(n, bool)
+    first[0] = True
+    first[1:] = bank[order][1:] != bank[order][:-1]
+    miss = miss | first
+    csum = np.cumsum(miss)
+    gstart = np.flatnonzero(first)
+    base = np.repeat(csum[gstart] - miss[gstart], np.diff(np.r_[gstart, n]))
+    row = np.empty(n, np.int32)
+    row[order] = (csum - base).astype(np.int32)
+    return row
+
+
+def _trace_draws(w: Workload, n: int, banks: int, seed: int):
+    """The shared per-request draws: lanes 0-3 of the ``trace_uniform``
+    counter hash keyed by (stream seed, request index) — never by batch
+    position, so stacking/sharding/padding cannot change a trace."""
+    i = np.arange(n, dtype=np.uint32)
+    bank = (trace_uniform(seed, i, 0) * np.float32(banks)).astype(np.int32)
+    hit = trace_uniform(seed, i, 1) < np.float32(w.row_hit_rate)
+    is_wr = (trace_uniform(seed, i, 2) < np.float32(w.write_frac)) \
+        .astype(np.int32)
+    # inter-arrival: geometric via inverse CDF from requests/cycle
+    rate = w.mpki / 1000.0 * w.ipc_peak
+    p = min(rate, 0.99)
+    u = trace_uniform(seed, i, 3).astype(np.float64)
+    gaps = (np.floor(np.log1p(-u) / np.log1p(-p)) + 1.0).astype(np.int32)
+    arrive = np.cumsum(gaps).astype(np.int32)
+    return bank, hit, is_wr, arrive
+
+
+def make_trace(w: Workload, n: int, banks: int, seed: int = 0):
+    """Synthetic request trace honouring ``w.row_hit_rate``: an intended hit
+    targets the bank's most recently opened row (the first touch of a bank is
+    always a miss), an intended miss opens a fresh row, so the achieved
+    row-hit rate in the simulator matches the spec up to binomial noise.
+    Row ids come from a grouped-cumsum (no per-bank host loop) — identical
+    traces to the retained ``make_trace_loop``."""
+    bank, hit, is_wr, arrive = _trace_draws(w, n, banks, seed)
+    return {"bank": bank, "row": _rows_from(bank, hit), "write": is_wr,
+            "arrive": arrive}
+
+
+def make_trace_loop(w: Workload, n: int, banks: int, seed: int = 0):
+    """The retained per-bank-loop reference of ``make_trace`` (same hash
+    draws, O(banks*n) host time)."""
+    bank, hit, is_wr, arrive = _trace_draws(w, n, banks, seed)
+    return {"bank": bank, "row": _rows_from_loop(bank, hit, banks),
+            "write": is_wr, "arrive": arrive}
+
+
+def timing_cycles(t: TimingParams) -> np.ndarray:
+    """(6,) int32 [tRCD, tRAS, tRP, tWR, tCL, tCWL] in memory-bus cycles —
+    the traced operand of the jitted simulator (values change, no retrace)."""
+    return np.asarray([t.cycles(p) for p in PARAMS]
+                      + [round(TCL_NS / CYCLE_NS), round(TCWL_NS / CYCLE_NS)],
+                      np.int32)
+
+
+def timing_cycles_banks(timing, banks: int) -> np.ndarray:
+    """(banks, 6) int32 per-bank cycle rows for the FR-FCFS simulator.
+
+    ``timing`` is a ``TimingParams`` (whole-DIMM: every bank gets the same
+    row), a (4,) / (D=1-free (Bp, 4)) ns array in PARAMS order — ``Bp``
+    profiled bank groups are block-mapped onto the ``banks`` simulator banks
+    (bank b reads profiled row ``b * Bp // banks``), so (D, banks_profiled,
+    4) tables from ``profile_population_arrays(banks=...)`` plug in
+    directly.  Rounding goes through ``TimingParams.cycles`` — identical to
+    ``timing_cycles``.
+    """
+    if isinstance(timing, TimingParams):
+        rows = timing_cycles(timing)[None, :]
+    else:
+        a = np.asarray(timing, np.float64)
+        if a.ndim == 1:
+            a = a[None, :]
+        if a.ndim != 2 or a.shape[-1] != len(PARAMS):
+            raise ValueError(f"timing table must be (4,) or (banks, 4) ns; "
+                             f"got shape {np.shape(timing)}")
+        rows = np.stack([timing_cycles(TimingParams(*map(float, r)))
+                         for r in a])
+    bp = rows.shape[0]
+    if bp > banks:
+        raise ValueError(f"{bp} profiled bank groups > {banks} sim banks")
+    idx = (np.arange(banks) * bp) // banks
+    return rows[idx].astype(np.int32)
+
+
+# Bumped once per trace of the jitted simulators; the no-retrace contract
+# (sweeping TimingParams VALUES reuses the compiled program) is asserted on
+# this counter in tests.  N_TRACE_BUILDS counts host-side trace-stack builds
+# (the `_stack_traces` cache regression).
+N_TRACES = 0
+N_TRACE_BUILDS = 0
+
+
+@functools.lru_cache(maxsize=16)
+def _stack_traces_cached(n_requests: int, banks: int, seed: int) -> dict:
+    global N_TRACE_BUILDS
+    N_TRACE_BUILDS += 1
+    trs = [make_trace(w, n_requests, banks, seed + i)
+           for i, w in enumerate(WORKLOADS)]
+    return {k: jnp.asarray(np.stack([tr[k] for tr in trs])) for k in trs[0]}
+
+
+def _stack_traces(n_requests: int, banks: int, seed: int) -> dict:
+    """(W, n) stacked traces for all WORKLOADS, cached per (n_requests,
+    banks, seed) so repeated grid evaluations (population sweeps, fig19's
+    core sweep) stop rebuilding host-side traces."""
+    return _stack_traces_cached(int(n_requests), int(banks), int(seed))
+
+
+# ------------------------------------------- the retained in-order walker
+
+def _sim_one(trace, tc, banks: int):
+    """Bank-state walk of one trace under one timing row (bus cycles).
+
+    Write accounting (Sec 6.3): a write's own completion latency is
+    tCWL-based; tWR (write recovery) delays the bank's next PRECHARGE — it is
+    folded into per-bank precharge-ready time, so reduced tWR shows up as
+    throughput via bank occupancy, not as response latency.
+    """
+    tRCD, tRAS, tRP, tWR, tCL, tCWL = (tc[i] for i in range(6))
+
+    def step(state, req):
+        open_row, ready, pre_ready = state
+        b, row, wr, arr = req["bank"], req["row"], req["write"], req["arrive"]
+        start = jnp.maximum(arr, ready[b])
+        hit = open_row[b] == row
+        # row miss: precharge the open row (respecting tRAS-since-activation
+        # and any pending write recovery), then activate
+        pre_ok = jnp.maximum(start, pre_ready[b])
+        t_act = pre_ok + tRP
+        t_col = jnp.where(hit, start, t_act + tRCD)
+        done = t_col + jnp.where(wr == 1, tCWL, tCL)
+        latency = done - arr
+        base_pre = jnp.where(hit, pre_ready[b], t_act + tRAS)
+        new_pre = jnp.maximum(base_pre, jnp.where(wr == 1, done + tWR, base_pre))
+        state = (open_row.at[b].set(row), ready.at[b].set(done),
+                 pre_ready.at[b].set(new_pre))
+        return state, (latency, hit)
+
+    init = (jnp.full((banks,), -1, jnp.int32),
+            jnp.zeros((banks,), jnp.int32),
+            jnp.full((banks,), -(10 ** 6), jnp.int32))
+    _, (lat, hit) = jax.lax.scan(step, init, trace)
+    lat = lat.astype(jnp.float32)
+    return {"avg_latency_cycles": jnp.mean(lat),
+            "p99_latency_cycles": jnp.percentile(lat, 99.0),
+            "row_hit_rate": jnp.mean(hit.astype(jnp.float32))}
+
+
+@functools.partial(jax.jit, static_argnames=("banks",))
+def _sim_grid(traces, timings, *, banks: int):
+    """traces: dict of (W, n) int32; timings: (T, 6) int32 cycle rows.
+    Returns dict of (T, W) metrics — the whole workload x timing grid as one
+    device call (the retained in-order walker)."""
+    global N_TRACES
+    N_TRACES += 1
+    per_t = jax.vmap(lambda tr, tc: _sim_one(tr, tc, banks), in_axes=(0, None))
+    return jax.vmap(per_t, in_axes=(None, 0))(traces, timings)
+
+
+def simulate_trace(trace, t: TimingParams, banks: int = 16) -> dict:
+    """Bank-state walk with the retained in-order walker. Latencies in
+    memory-bus cycles (DDR3-1600).
+
+    Retrace-free contract: the jitted core takes ``timing_cycles(t)`` as a
+    traced array, so calls that differ only in `TimingParams` VALUES (same
+    trace length / banks) reuse the compiled program.
+    """
+    traces = {k: jnp.asarray(v, jnp.int32)[None] for k, v in trace.items()}
+    res = _sim_grid(traces, jnp.asarray(timing_cycles(t))[None], banks=banks)
+    return {k: float(v[0, 0]) for k, v in res.items()}
+
+
+# ------------------------------------------------------- FR-FCFS simulator
+
+_BIG = 2 ** 30
+
+
+def _scan_sim(trace, tc_banks, *, cfg: MemSimConfig, pallas: bool):
+    """One trace through the FR-FCFS scheduler: a lax.scan servicing exactly
+    one request per step, picked from the bounded queue by the
+    ``kernels/bank_sched.py`` candidate scoring (row-hit first among arrived
+    requests, then oldest by (arrive, trace index)).  Returns per-request
+    (latency, hit) int32 arrays in SERVICE order.
+    """
+    from repro.kernels import ops
+    n = int(trace["bank"].shape[0])
+    Q = min(cfg.queue, n)
+    bank_rank, bank_chan = _bank_maps(cfg)
+    bank_rank_c, bank_chan_c = jnp.asarray(bank_rank), jnp.asarray(bank_chan)
+    kkw = dict(tbl=cfg.tbl, trrd=cfg.trrd, tfaw=cfg.tfaw,
+               use_bus=cfg.bus, use_act=cfg.act_window, pallas=pallas)
+    NEG = jnp.int32(-(10 ** 6))
+
+    init = (
+        tuple(jnp.asarray(trace[k][:Q], jnp.int32)
+              for k in ("bank", "row", "write", "arrive")),
+        jnp.arange(Q, dtype=jnp.int32),                 # q_idx (trace order)
+        jnp.ones((Q,), bool),                           # q_valid
+        jnp.full((cfg.banks,), -1, jnp.int32),          # open_row
+        jnp.zeros((cfg.banks,), jnp.int32),             # ready
+        jnp.full((cfg.banks,), NEG, jnp.int32),         # pre_ready
+        jnp.zeros((cfg.channels,), jnp.int32),          # bus_ready
+        jnp.full((cfg.ranks,), NEG, jnp.int32),         # last_act
+        jnp.full((cfg.ranks, 4), NEG, jnp.int32),       # faw ring (sorted)
+        jnp.int32(0),                                   # t_now
+        jnp.int32(Q),                                   # next_ptr
+    )
+
+    def step(st, _):
+        ((q_bank, q_row, q_write, q_arrive), q_idx, q_valid, open_row, ready,
+         pre_ready, bus_ready, last_act, faw, t_now, next_ptr) = st
+        key, hit, t_act, t_col, done, new_pre, lat = ops.bank_sched(
+            q_bank, q_row, q_write, q_arrive, q_valid, open_row, ready,
+            pre_ready, bus_ready, last_act, faw[:, 0], t_now,
+            tc_banks, bank_rank_c, bank_chan_c, **kkw)
+        # lexicographic winner: max key, then min arrive, then min trace idx
+        c1 = key == jnp.max(key)
+        arr_m = jnp.where(c1, q_arrive, _BIG)
+        c2 = c1 & (q_arrive == jnp.min(arr_m))
+        w = jnp.argmin(jnp.where(c2, q_idx, _BIG))
+        wb, wrow = q_bank[w], q_row[w]
+        wdone, wnpre, wact, wcol = done[w], new_pre[w], t_act[w], t_col[w]
+        wmiss = hit[w] == 0
+        open_row = open_row.at[wb].set(wrow)
+        ready = ready.at[wb].set(wdone)
+        pre_ready = pre_ready.at[wb].set(wnpre)
+        if cfg.bus:
+            bus_ready = bus_ready.at[bank_chan_c[wb]].set(wdone)
+        if cfg.act_window:
+            wrank = bank_rank_c[wb]
+            la = last_act[wrank]
+            last_act = last_act.at[wrank].set(
+                jnp.where(wmiss, jnp.maximum(la, wact), la))
+            ring = faw[wrank]
+            pushed = jnp.sort(jnp.concatenate([ring[1:], wact[None]]))
+            faw = faw.at[wrank].set(jnp.where(wmiss, pushed, ring))
+        t_now = jnp.maximum(t_now, wcol)
+        # refill the winner's slot with the next trace request
+        src = jnp.minimum(next_ptr, n - 1)
+        q = tuple(arr.at[w].set(trace[k][src]) for arr, k in
+                  zip((q_bank, q_row, q_write, q_arrive),
+                      ("bank", "row", "write", "arrive")))
+        q_idx = q_idx.at[w].set(next_ptr)
+        q_valid = q_valid.at[w].set(next_ptr < n)
+        st = (q, q_idx, q_valid, open_row, ready, pre_ready, bus_ready,
+              last_act, faw, t_now, next_ptr + 1)
+        return st, (lat[w], hit[w])
+
+    _, (lat, hit) = jax.lax.scan(step, init, None, length=n)
+    return lat, hit
+
+
+def _reduce_metrics(lat, hit, xp):
+    """Exact-arithmetic metrics shared by the jitted grid and the NumPy
+    reference walker: int32 totals, one f32 division each, and a
+    nearest-rank p99 (an exact order statistic, unlike the retained
+    in-order walker's interpolated ``jnp.percentile``)."""
+    n = int(lat.shape[-1])
+    k = max(int(np.ceil(0.99 * n)) - 1, 0)
+    total = xp.sum(lat, axis=-1, dtype=xp.int32)
+    hits = xp.sum(hit, axis=-1, dtype=xp.int32)
+    # divide via an explicit host-precomputed reciprocal: XLA strength-reduces
+    # x / <constant> to x * (1/<constant>), so spelling the multiply out is
+    # what keeps the device and NumPy reference paths bit-identical
+    inv_n = np.float32(1.0 / n)
+    return {"avg_latency_cycles": total.astype(xp.float32) * inv_n,
+            "p99_latency_cycles": xp.sort(lat, axis=-1)[..., k]
+                .astype(xp.float32),
+            "row_hit_rate": hits.astype(xp.float32) * inv_n,
+            "total_latency_cycles": total, "n_row_hits": hits}
+
+
+# --------------------------------------------------------- IPC/stall model
+
+_LAT_SCALE = np.float32(CPU_GHZ * CYCLE_NS)     # bus cycles -> cpu cycles
+_STALL_FRAC = np.float32(1.0 - MLP_OVERLAP)
+# one fused host-side constant: bus-cycle latency -> effective stall cpu
+# cycles in a SINGLE device multiply (two chained constant multiplies would
+# invite XLA to reassociate them away from NumPy's rounding)
+_STALL_SCALE = np.float32(_LAT_SCALE * _STALL_FRAC)
+
+
+def _wl_consts():
+    """(W,) f32 per-workload constants of the IPC model, precomputed host-side
+    (one fixed op order for device and NumPy reference — parity by
+    construction)."""
+    mpki1k = np.asarray([np.float32(w.mpki / 1000.0) for w in WORKLOADS],
+                        np.float32)
+    inv_peak = np.asarray([np.float32(1.0 / w.ipc_peak) for w in WORKLOADS],
+                          np.float32)
+    return mpki1k, inv_peak
+
+
+def ipc32(avg_lat, mpki1k, inv_peak, xp):
+    """Memory-stall IPC model in float32:
+    CPI = 1/IPC_peak + MPKI/1000 * stall_cycles.
+
+    NOTE: float op order is NOT portable across XLA compilations — XLA CPU
+    FMA-contracts the multiply-add and reassociates constant multiplies below
+    the HLO level (``--xla_allow_excess_precision`` defaults on; barriers,
+    bitcasts, and ``where`` all fail to block it), and two differently-shaped
+    programs can contract differently.  Bit-parity consumers therefore never
+    compare this map across programs: every speedup path — the fused
+    population call, ``evaluate_system_grid``, and the NumPy reference
+    walker — scores IPC through the ONE jitted ``_score_jit`` program from
+    exact integer latency totals (the simulators' parity surface), so their
+    float bits agree by construction.
+    """
+    stall = xp.asarray(avg_lat, xp.float32) * _STALL_SCALE
+    cpi = inv_peak + mpki1k * stall
+    return xp.float32(1.0) / cpi
+
+
+def _score(totals, mpki1k, inv_peak, *, n: int):
+    """(T, W) int32 total latencies -> ((T, W) f32 IPC, (T-1, W) f32 speedup
+    ratios vs row 0) — THE shared scoring program (see ``ipc32``)."""
+    avg = totals.astype(jnp.float32) * np.float32(1.0 / n)
+    ipc_tw = ipc32(avg, mpki1k, inv_peak, jnp)
+    return ipc_tw, ipc_tw[1:] / ipc_tw[0][None, :]
+
+
+_score_jit = functools.partial(jax.jit, static_argnames=("n",))(_score)
+
+
+def ipc(w: Workload, avg_mem_lat_bus_cycles: float) -> float:
+    """Single-workload convenience wrapper over ``ipc32``."""
+    return float(ipc32(np.float32(avg_mem_lat_bus_cycles),
+                       np.float32(w.mpki / 1000.0),
+                       np.float32(1.0 / w.ipc_peak), np))
+
+
+def weighted_speedup(ipcs_new, ipcs_base) -> float:
+    return float(sum(n / b for n, b in zip(ipcs_new, ipcs_base)))
+
+
+# ------------------------------------------------------------- jitted grids
+
+def _memsim_grid(traces, tc_tables, *, cfg: MemSimConfig, pallas: bool):
+    """traces: dict of (W, n) int32; tc_tables: (T, banks, 6) int32 cycle
+    rows.  The whole (timing tables x workloads) simulation grid as one
+    device program; returns dict of (T, W) metrics (exact integer totals +
+    the deterministic f32 reductions)."""
+    global N_TRACES
+    N_TRACES += 1
+    one = lambda tr, tc: _reduce_metrics(
+        *_scan_sim(tr, tc, cfg=cfg, pallas=pallas), xp=jnp)
+    per_t = jax.vmap(one, in_axes=(0, None))
+    return jax.vmap(per_t, in_axes=(None, 0))(traces, tc_tables)
+
+
+_memsim_grid_jit = functools.partial(
+    jax.jit, static_argnames=("cfg", "pallas"))(_memsim_grid)
+
+
+def _speedup_impl(traces, tc_dimm, tc_base, *, cfg: MemSimConfig,
+                  pallas: bool):
+    """(D, 2, W) int32 [own-table, base-table] total latencies — base + D
+    tables simulated in one program.  Only ``tc_dimm`` is DIMM-shaped: the
+    sharded route splits it over the mesh while traces / base replicate
+    (each shard re-simulates the cheap base row and echoes it per DIMM so
+    every output is DIMM-leading).  Outputs are exact integers, so sharded
+    and single-device runs are bit-identical by construction; the float
+    scoring happens afterwards in the shared ``_score_jit`` program."""
+    tc_all = jnp.concatenate([tc_base[None], tc_dimm], axis=0)
+    met = _memsim_grid(traces, tc_all, cfg=cfg, pallas=pallas)
+    tot = met["total_latency_cycles"]                    # (1+D, W) i32
+    own = tot[1:]
+    base = jnp.broadcast_to(tot[0][None, :], own.shape)
+    return jnp.stack([own, base], axis=1)
+
+
+_speedup_jit = functools.partial(
+    jax.jit, static_argnames=("cfg", "pallas"))(_speedup_impl)
+
+
+def simulate(trace, timing, *, config: MemSimConfig | None = None) -> dict:
+    """One trace through the FR-FCFS simulator under one (possibly per-bank)
+    timing table; see ``timing_cycles_banks`` for accepted ``timing`` forms.
+    """
+    from repro.kernels import ops
+    cfg = MemSimConfig() if config is None else config
+    traces = {k: jnp.asarray(v, jnp.int32)[None] for k, v in trace.items()}
+    tc = jnp.asarray(timing_cycles_banks(timing, cfg.banks))[None]
+    met = _memsim_grid_jit(traces, tc, cfg=cfg, pallas=ops.use_pallas())
+    return {k: (float(v[0, 0]) if v.dtype != jnp.int32 else int(v[0, 0]))
+            for k, v in met.items()}
+
+
+# --------------------------------------------------------- system evaluation
+
+def evaluate_system_grid(timings, *, n_requests: int = 20000, banks: int = 16,
+                         seed: int = 0,
+                         config: MemSimConfig | None = None) -> np.ndarray:
+    """(T, W) float32 IPC matrix for T timing points over all WORKLOADS — the
+    whole grid (workloads x timing rows), simulation + IPC model, as a single
+    jitted device call.  ``config=None`` runs the retained in-order service
+    rule (the ``core.ramlite`` semantics); pass a ``MemSimConfig`` for the
+    FR-FCFS scheduler."""
+    from repro.kernels import ops
+    cfg = inorder_config(banks) if config is None else config
+    traces = _stack_traces(n_requests, cfg.banks, seed)
+    tcs = jnp.asarray(np.stack([timing_cycles_banks(t, cfg.banks)
+                                for t in timings]))
+    met = _memsim_grid_jit(traces, tcs, cfg=cfg, pallas=ops.use_pallas())
+    mpki1k, inv_peak = _wl_consts()
+    ipc_tw, _ = _score_jit(met["total_latency_cycles"], jnp.asarray(mpki1k),
+                           jnp.asarray(inv_peak), n=n_requests)
+    return np.asarray(ipc_tw)
+
+
+def evaluate_system(t: TimingParams, *, n_requests: int = 20000,
+                    banks: int = 16, seed: int = 0, config=None) -> dict:
+    """Per-workload IPC under timing t."""
+    ipcs = evaluate_system_grid([t], n_requests=n_requests, banks=banks,
+                                seed=seed, config=config)[0]
+    return {w.name: float(v) for w, v in zip(WORKLOADS, ipcs)}
+
+
+def speedup_summary(t_new: TimingParams, t_base: TimingParams = STANDARD,
+                    cores: int = 4, seed: int = 0, ipcs=None, **kw) -> dict:
+    """``ipcs`` short-circuits the simulation with a precomputed
+    ``evaluate_system_grid([t_base, t_new], ...)`` result — only the
+    ``cores``-dependent mix sampling reruns (used by fig19's core sweep).
+
+    The 32 multi-core mixes (Sec 6.3) come from the dedicated ``mix_uniform``
+    hash stream keyed by (seed, mix draw, core slot) — decoupled from trace
+    seeding, so the mixes are invariant under trace-configuration changes.
+    """
+    if ipcs is None:
+        ipcs = evaluate_system_grid([t_base, t_new], seed=seed, **kw)
+    base, new = ipcs[0], ipcs[1]
+    names = [w.name for w in WORKLOADS]
+    per_wl = {n: float(new[i] / base[i]) for i, n in enumerate(names)}
+    draws = mix_uniform(seed, np.arange(32, dtype=np.uint32)[:, None],
+                        np.arange(cores, dtype=np.uint32)[None, :])
+    mixes = (draws * np.float32(len(names))).astype(np.int64)   # (32, cores)
+    ws = [weighted_speedup(new[m], base[m]) / cores for m in mixes]
+    return {"per_workload_speedup": per_wl,
+            "mean_singlecore_speedup": float(np.mean(list(per_wl.values()))),
+            "mean_weighted_speedup": float(np.mean(ws))}
+
+
+def _resolve_tables(timings) -> list:
+    """``timings`` -> list of per-DIMM table specs accepted by
+    ``timing_cycles_banks``: a sequence of TimingParams, a (D, 4) ns array
+    (whole-DIMM tables), or a (D, banks, 4) ns array (per-bank tables from
+    ``profile_population_arrays(banks=...)``)."""
+    if hasattr(timings, "ndim"):
+        a = np.asarray(timings)
+        if a.ndim not in (2, 3):
+            raise ValueError(f"timing array must be (D, 4) or (D, banks, 4);"
+                             f" got {a.shape}")
+        return list(a)
+    return [t if isinstance(t, TimingParams) else np.asarray(t)
+            for t in timings]
+
+
+def system_speedup_population(timings, t_base: TimingParams = STANDARD, *,
+                              n_requests: int = 20000, banks: int = 16,
+                              seed: int = 0, scheduler: str = "frfcfs",
+                              config: MemSimConfig | None = None,
+                              mesh=None) -> dict:
+    """Per-DIMM (possibly per-bank) profiled timings -> per-DIMM mean system
+    speedups: (base + D timing tables) x workloads simulated AND scored by
+    the in-grid IPC model in ONE device call.
+
+    ``timings``: sequence of `TimingParams`, a (D, 4) ns array (whole-DIMM
+    tables, e.g. ``profile_population`` output), or a (D, banks_profiled, 4)
+    per-bank array from ``profile_population_arrays(banks=...)`` — each
+    request is charged its own bank's row.  ``scheduler``: "frfcfs" (default
+    ``MemSimConfig``) or "inorder" (the retained walker semantics —
+    ``core.ramlite.system_speedup_population``'s route); ``config``
+    overrides either.  ``mesh`` shards the DIMM (table) axis via
+    ``substrate._run_sharded`` — traces replicate and are hash-keyed by
+    global request index, so sharded/padded runs are bit-identical to the
+    single-device call.
+    """
+    from repro.kernels import ops
+    if config is not None:
+        cfg = config
+    elif scheduler == "frfcfs":
+        cfg = MemSimConfig(banks=banks)
+    elif scheduler == "inorder":
+        cfg = inorder_config(banks)
+    else:
+        raise ValueError(f"unknown scheduler {scheduler!r}")
+    tables = _resolve_tables(timings)
+    tcs = jnp.asarray(np.stack([timing_cycles_banks(t, cfg.banks)
+                                for t in tables]))
+    tc_base = jnp.asarray(timing_cycles_banks(t_base, cfg.banks))
+    traces = _stack_traces(n_requests, cfg.banks, seed)
+    args = (traces, tcs, tc_base)
+    statics = dict(cfg=cfg, pallas=ops.use_pallas())
+    out = np.asarray(_dispatch("memsim_speedup", mesh, _speedup_impl,
+                               _speedup_jit, args, statics,
+                               batch_argnums=(1,)))    # (D, 2, W) i32
+    totals = np.concatenate([out[:1, 1], out[:, 0]], axis=0)  # (1+D, W)
+    mpki1k, inv_peak = _wl_consts()
+    _, ratios = _score_jit(jnp.asarray(totals), jnp.asarray(mpki1k),
+                           jnp.asarray(inv_peak), n=n_requests)
+    ratios = np.asarray(ratios)                          # (D, W) f32
+    sp = ratios.astype(np.float64).mean(axis=1)
+    return {"per_dimm_speedup": sp,
+            "per_dimm_workload_speedup": ratios,
+            "mean_speedup": float(sp.mean()),
+            "median_speedup": float(np.median(sp)),
+            "min_speedup": float(sp.min()), "max_speedup": float(sp.max())}

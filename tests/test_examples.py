@@ -1,0 +1,33 @@
+"""Examples smoke tests: run the quickstart and the characterization
+walkthrough fast paths under a tiny population, so the documented entry
+points can't silently rot as the layers underneath them move."""
+import importlib.util
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _load(name):
+    spec = importlib.util.spec_from_file_location(
+        f"examples_{name}", REPO / "examples" / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_quickstart_fast_path(capsys):
+    _load("quickstart").main(fast=True)
+    out = capsys.readouterr().out
+    assert "[diva-profiling] operating point" in out
+    assert "[memsim]" in out and "mean speedup" in out
+    assert "[checkpoint-ecc]" in out and "recovered=True" in out
+    assert "[train] loss" in out
+
+
+def test_diva_characterization_fast_path(capsys):
+    _load("diva_characterization").main(fast=True)
+    out = capsys.readouterr().out
+    assert "== Fig 6:" in out
+    assert "re-profiling follows the drift" in out
+    assert "blind vs oracle timing agreement" in out
+    assert "DivaProfiler(discovery=...)" in out

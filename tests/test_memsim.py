@@ -1,0 +1,315 @@
+"""Memory-system scale-out tests: the memsim FR-FCFS simulator (kernel
+triple, jitted-vs-NumPy-walker bit parity, in-order compat mode), per-bank
+DIVA timing tables through the profiling stack, the fused
+``system_speedup_population`` grid (banks=1 in-order reduction bit-identical
+to the retained ramlite route, sharded bit-identical to single-device,
+per-bank speedup >= whole-DIMM), and the trace/mix satellite fixes."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ramlite
+from repro.core.geometry import SMALL
+from repro.core.population import make_population
+from repro.core.substrate import (DimmBatch, lifetime_population, mix_uniform,
+                                  profile_population_arrays, trace_uniform)
+from repro.core.timing import STANDARD, TimingParams
+from repro.memsim import reference, sim
+from repro.sharding import dimm_mesh
+
+TABLES = np.array([[8.75, 23.75, 8.75, 6.25],
+                   [11.25, 30.0, 11.25, 12.5],
+                   [12.5, 32.5, 12.5, 13.75]])
+
+
+# ------------------------------------------------------------ kernel triple
+
+def test_bank_sched_kernel_oracle_numpy_value_identical():
+    """Pallas kernel == jnp oracle == NumPy ``candidate_times`` on random
+    queue/bank states (exact int32 arithmetic, every config flag on)."""
+    from repro.kernels import ops, ref
+    from repro.kernels.bank_sched import OUTPUTS, candidate_times
+    rng = np.random.default_rng(0)
+    Q, B, R, C = 8, 16, 2, 2
+    kw = dict(tbl=4, trrd=5, tfaw=24, use_bus=True, use_act=True)
+    for trial in range(3):
+        args = (rng.integers(0, B, Q).astype(np.int32),          # q_bank
+                rng.integers(0, 50, Q).astype(np.int32),         # q_row
+                rng.integers(0, 2, Q).astype(np.int32),          # q_write
+                rng.integers(0, 400, Q).astype(np.int32),        # q_arrive
+                rng.integers(0, 2, Q).astype(bool),              # q_valid
+                rng.integers(-1, 50, B).astype(np.int32),        # open_row
+                rng.integers(0, 500, B).astype(np.int32),        # ready
+                rng.integers(-100, 500, B).astype(np.int32),     # pre_ready
+                rng.integers(0, 500, C).astype(np.int32),        # bus_ready
+                rng.integers(-100, 400, R).astype(np.int32),     # last_act
+                rng.integers(-100, 400, R).astype(np.int32),     # faw_old
+                np.int32(rng.integers(0, 400)),                  # t_now
+                rng.integers(4, 30, (B, 6)).astype(np.int32),    # tc
+                (np.arange(B) % R).astype(np.int32),             # bank_rank
+                (np.arange(B) % C).astype(np.int32))             # bank_chan
+        kern = ops.bank_sched(*args, pallas=True, **kw)
+        orac = ref.bank_sched(*args, **kw)
+        host = candidate_times(*args, xp=np, **kw)
+        for name, k, o, h in zip(OUTPUTS, kern, orac, host):
+            assert np.array_equal(np.asarray(k), np.asarray(o)), (trial, name)
+            assert np.array_equal(np.asarray(o), h), (trial, name)
+
+
+# ------------------------------------------------------- trace vectorization
+
+def test_make_trace_vectorized_matches_loop_all_workloads():
+    """Satellite: the grouped-cumsum ``make_trace`` must reproduce the
+    retained per-bank Python loop exactly for every workload."""
+    for i, w in enumerate(sim.WORKLOADS):
+        fast = sim.make_trace(w, 1200, 16, seed=i)
+        loop = sim.make_trace_loop(w, 1200, 16, seed=i)
+        for k in fast:
+            assert np.array_equal(fast[k], loop[k]), (w.name, k)
+
+
+def test_make_trace_handles_empty_banks():
+    w = sim.WORKLOADS[0]
+    fast = sim.make_trace(w, 20, 64, seed=3)     # most banks untouched
+    loop = sim.make_trace_loop(w, 20, 64, seed=3)
+    for k in fast:
+        assert np.array_equal(fast[k], loop[k]), k
+
+
+def test_trace_hash_is_position_independent():
+    """Global-index RNG rule: a trace prefix is independent of trace length
+    (the hash keys on request index, never on array shape)."""
+    w = sim.WORKLOADS[1]
+    short = sim.make_trace(w, 200, 16, seed=5)
+    long = sim.make_trace(w, 400, 16, seed=5)
+    for k in ("bank", "write", "arrive"):
+        assert np.array_equal(short[k], long[k][:200]), k
+
+
+# ----------------------------------------------------- scheduler bit parity
+
+def test_inorder_mode_matches_retained_walker():
+    """queue=1 + constraints off degenerates FR-FCFS to the retained in-order
+    walker: identical avg latency and hit rate (exact f32 at this n)."""
+    cfg = sim.inorder_config(8)
+    for wi in (0, 2, 3):
+        tr = sim.make_trace(sim.WORKLOADS[wi], 800, 8, seed=wi)
+        legacy = ramlite.simulate_trace(tr, STANDARD, banks=8)
+        mem = sim.simulate(tr, STANDARD, config=cfg)
+        assert mem["avg_latency_cycles"] == legacy["avg_latency_cycles"], wi
+        assert mem["row_hit_rate"] == legacy["row_hit_rate"], wi
+
+
+@pytest.mark.parametrize("cfg", [
+    sim.MemSimConfig(banks=8),
+    sim.MemSimConfig(banks=8, channels=1, ranks=1),
+    sim.MemSimConfig(banks=8, queue=4, bus=False),
+    sim.inorder_config(8),
+])
+def test_jitted_simulator_matches_numpy_reference(cfg):
+    tr = sim.make_trace(sim.WORKLOADS[3], 500, 8, seed=1)
+    mem = sim.simulate(tr, STANDARD, config=cfg)
+    ref = reference.simulate_trace_loop(tr, STANDARD, config=cfg)
+    assert mem == ref
+
+
+def test_per_bank_tables_charge_each_request_its_bank():
+    """A table whose banks split fast/standard must land between the all-fast
+    and all-standard simulations, and exactly match the NumPy reference."""
+    tr = sim.make_trace(sim.WORKLOADS[4], 800, 8, seed=2)
+    cfg = sim.MemSimConfig(banks=8)
+    fast = np.array([[8.75, 23.75, 8.75, 6.25]])
+    split = np.array([[8.75, 23.75, 8.75, 6.25], [13.75, 35.0, 13.75, 15.0]])
+    a_fast = sim.simulate(tr, fast, config=cfg)["avg_latency_cycles"]
+    a_std = sim.simulate(tr, STANDARD, config=cfg)["avg_latency_cycles"]
+    m = sim.simulate(tr, split, config=cfg)
+    assert a_fast < m["avg_latency_cycles"] < a_std
+    assert m == reference.simulate_trace_loop(tr, split, config=cfg)
+
+
+def test_deeper_queue_never_hurts_and_constraints_cost():
+    """FR-FCFS reordering (deeper queue) lowers or preserves avg latency;
+    enabling the bus/tFAW constraints can only add contention."""
+    tr = sim.make_trace(sim.WORKLOADS[2], 1500, 16, seed=0)   # gups
+    q1 = sim.simulate(tr, STANDARD,
+                      config=sim.MemSimConfig(queue=1))["avg_latency_cycles"]
+    q8 = sim.simulate(tr, STANDARD,
+                      config=sim.MemSimConfig(queue=8))["avg_latency_cycles"]
+    assert q8 <= q1
+    free = sim.simulate(tr, STANDARD, config=sim.MemSimConfig(
+        queue=8, bus=False, act_window=False))["avg_latency_cycles"]
+    assert free <= q8
+
+
+# ------------------------------------------------- per-bank profiling layer
+
+@pytest.fixture(scope="module")
+def pop32():
+    pop = make_population(SMALL, 32)
+    return pop, DimmBatch.from_population(pop)
+
+
+def test_per_bank_profile_tables_below_whole_dimm(pop32):
+    """Each bank's sweep sees only its own subarrays' failures, so per-bank
+    tables are entry-wise <= the whole-DIMM table (= the per-bank max
+    envelope), with real spread somewhere in the default population."""
+    _, batch = pop32
+    whole = profile_population_arrays(batch, temp_C=55.0, multibit_only=True)
+    pb = profile_population_arrays(batch, temp_C=55.0, multibit_only=True,
+                                   banks=4)
+    assert whole.shape == (batch.n_dimms, 4)
+    assert pb.shape == (batch.n_dimms, 4, 4)
+    assert (pb <= whole[:, None, :]).all()
+    assert np.array_equal(pb.max(axis=1), whole)
+    assert (pb < whole[:, None, :]).any()    # bank heterogeneity is real
+
+
+def test_per_bank_banks_must_divide_subarrays(pop32):
+    _, batch = pop32
+    with pytest.raises(ValueError):
+        profile_population_arrays(batch, banks=3)
+    with pytest.raises(ValueError):
+        lifetime_population(batch, np.zeros(1, np.float32),
+                            np.full(1, 55.0), banks=3)
+
+
+def test_lifetime_threads_per_bank_tables(pop32):
+    """banks>1 lifetime: (E, D, banks, 4) trajectories whose max-envelope
+    equals the banks=1 scan, per-bank stale/ecc diagnostics shaped along."""
+    _, batch = pop32
+    ages = np.array([0.0, 6.0], np.float32)
+    temps = np.full(2, 55.0)
+    pb = lifetime_population(batch, ages, temps, banks=2)
+    whole = lifetime_population(batch, ages, temps)
+    D = batch.n_dimms
+    assert pb["timings"].shape == (2, D, 2, 4)
+    assert pb["stale_fail"].shape == (2, D, 2)
+    assert pb["ecc_lambda"].shape == (2, D, 2)
+    assert np.array_equal(pb["timings"].max(axis=2), whole["timings"])
+
+
+def test_profiler_wrappers_serve_per_bank_tables():
+    from repro.core.profiling import ALDRAM, DivaProfiler
+    d = make_population(SMALL, 3)[1]
+    prof = DivaProfiler(d, banks=2)
+    t = prof.timing()
+    table = prof.bank_table()
+    assert table.shape == (2, 4)
+    assert t == TimingParams(*(float(v) for v in table.max(axis=0)))
+    al = ALDRAM.install(d, banks=2)
+    assert al.bank_table(55.0).shape == (2, 4)
+    assert al.timing(55.0) == TimingParams(
+        *(float(v) for v in al.bank_table(55.0).max(axis=0)))
+
+
+# ------------------------------------------------------ fused speedup grid
+
+def test_population_banks1_reduction_matches_ramlite_route():
+    """Acceptance: the banks=1 in-order reduction reproduces the retained
+    ramlite semantics bit for bit — the fused call equals the
+    evaluate_system_grid + host-ratio formula, and the memsim entry point
+    with scheduler="inorder" IS the ramlite route."""
+    pop = ramlite.system_speedup_population(TABLES, n_requests=500)
+    mem = sim.system_speedup_population(TABLES, n_requests=500,
+                                        scheduler="inorder")
+    assert np.array_equal(pop["per_dimm_workload_speedup"],
+                          mem["per_dimm_workload_speedup"])
+    ipcs = sim.evaluate_system_grid([STANDARD, *TABLES], n_requests=500)
+    ratios = ipcs[1:] / ipcs[0][None, :]
+    assert np.array_equal(ratios, pop["per_dimm_workload_speedup"])
+    sp = ratios.astype(np.float64).mean(axis=1)
+    assert np.array_equal(sp, pop["per_dimm_speedup"])
+
+
+def test_population_singleton_matches_summary_exactly():
+    fast = TimingParams(trcd=8.75, tras=23.75, trp=8.75, twr=6.25)
+    s = sim.speedup_summary(fast, STANDARD, n_requests=500)
+    pop = ramlite.system_speedup_population([fast], n_requests=500)
+    assert pop["per_dimm_speedup"][0] == s["mean_singlecore_speedup"]
+
+
+@pytest.mark.parametrize("scheduler", ["inorder", "frfcfs"])
+def test_fused_grid_matches_loop_reference_bit_identical(scheduler):
+    fused = sim.system_speedup_population(TABLES, n_requests=250,
+                                          scheduler=scheduler)
+    loop = reference.system_speedup_loop(TABLES, n_requests=250,
+                                         scheduler=scheduler)
+    assert np.array_equal(fused["per_dimm_workload_speedup"],
+                          loop["per_dimm_workload_speedup"])
+    assert np.array_equal(fused["per_dimm_speedup"],
+                          loop["per_dimm_speedup"])
+
+
+def test_per_bank_speedup_at_least_whole_dimm(pop32):
+    """Acceptance: FR-FCFS under (D, banks, 4) profiled tables yields mean
+    population speedup >= the whole-DIMM-table speedup on the default
+    32-DIMM population (strictly greater when any bank has slack)."""
+    _, batch = pop32
+    whole = profile_population_arrays(batch, temp_C=55.0, multibit_only=True)
+    pb = profile_population_arrays(batch, temp_C=55.0, multibit_only=True,
+                                   banks=4)
+    s_whole = sim.system_speedup_population(whole, n_requests=600)
+    s_bank = sim.system_speedup_population(pb, n_requests=600)
+    assert s_bank["mean_speedup"] >= s_whole["mean_speedup"]
+    assert (s_bank["per_dimm_speedup"] >= s_whole["per_dimm_speedup"] - 1e-12).all()
+    if (pb < whole[:, None, :]).any():
+        assert s_bank["mean_speedup"] > s_whole["mean_speedup"]
+
+
+def test_sharded_speedup_grid_bit_identical():
+    """Acceptance: the mesh= grid is bit-identical to single-device (always
+    runnable on a 1-device mesh; the sharded-2dev CI leg adds real
+    multi-device + padding coverage via D=3 on 2 devices)."""
+    ref = sim.system_speedup_population(TABLES, n_requests=300)
+    out = sim.system_speedup_population(TABLES, n_requests=300,
+                                        mesh=dimm_mesh())
+    assert np.array_equal(ref["per_dimm_workload_speedup"],
+                          out["per_dimm_workload_speedup"])
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2, reason="needs a multi-device mesh")
+def test_sharded_speedup_grid_multi_device_padding():
+    ref = sim.system_speedup_population(TABLES, n_requests=300)
+    out = sim.system_speedup_population(TABLES, n_requests=300,
+                                        mesh=dimm_mesh(2))
+    assert np.array_equal(ref["per_dimm_workload_speedup"],
+                          out["per_dimm_workload_speedup"])
+
+
+# --------------------------------------------- no-retrace / no-rebuild / RNG
+
+def test_speedup_population_no_retrace_no_rebuild():
+    """Satellite: repeated population/grid calls with new table VALUES reuse
+    both the compiled program (N_TRACES) and the cached host traces
+    (N_TRACE_BUILDS)."""
+    sim.system_speedup_population(TABLES, n_requests=250)          # warm
+    sim.evaluate_system_grid([STANDARD, TABLES[0]], n_requests=250)
+    n0, b0 = sim.N_TRACES, sim.N_TRACE_BUILDS
+    for k in range(3):
+        sim.system_speedup_population(TABLES - 1.25 * k, n_requests=250)
+    s = sim.evaluate_system_grid([STANDARD, TimingParams(trcd=10.0)],
+                                 n_requests=250)
+    for cores in (1, 2, 4):
+        sim.speedup_summary(TimingParams(trcd=10.0), STANDARD, cores=cores,
+                            ipcs=s)
+    assert sim.N_TRACES == n0
+    assert sim.N_TRACE_BUILDS == b0
+    assert ramlite.N_TRACES == sim.N_TRACES     # live compat counter
+
+
+def test_mix_stream_is_dedicated_and_deterministic():
+    """Satellite: multi-core mixes come from their own hash stream — fresh
+    constants (disjoint from trace draws), deterministic in (seed, draw,
+    core), and invariant under trace-configuration changes."""
+    u1 = mix_uniform(0, np.arange(32, dtype=np.uint32)[:, None],
+                     np.arange(4, dtype=np.uint32)[None, :])
+    u2 = mix_uniform(0, np.arange(32, dtype=np.uint32)[:, None],
+                     np.arange(4, dtype=np.uint32)[None, :])
+    assert np.array_equal(u1, u2)
+    assert not np.array_equal(
+        u1[:, 0], trace_uniform(0, np.arange(32, dtype=np.uint32), 0))
+    ipcs = sim.evaluate_system_grid([STANDARD, TABLES[0]], n_requests=250)
+    a = sim.speedup_summary(TABLES[0], STANDARD, ipcs=ipcs, seed=0)
+    b = sim.speedup_summary(TABLES[0], STANDARD, ipcs=ipcs, seed=1)
+    assert a["mean_weighted_speedup"] != b["mean_weighted_speedup"]
+    assert a["per_workload_speedup"] == b["per_workload_speedup"]
