@@ -8,14 +8,25 @@ one jitted ``lifetime_population`` epoch scan vs the per-DIMM Python
 lifecycle ``lifetime_loop``, one jitted ``recover_mapping_population``
 scramble recovery vs the per-subarray ``estimate_row_mapping`` loop, and one
 fused ``memsim.system_speedup_population`` grid vs the retained per-request
-in-order reference walker (``memsim.reference.system_speedup_loop``); CI
-asserts all five stay >= 5x on CPU with bit-identical results.
+in-order reference walker (``memsim.reference.system_speedup_loop``), and one
+streamed ``stream_profile_population`` scan over a stream of fleet sizes vs
+the dense path's per-size re-lowering; CI asserts all six stay >= 5x on CPU
+with bit-identical results.
 
     PYTHONPATH=src python benchmarks/kernel_bench.py --smoke
+
+``--bench-streaming`` runs the fleet-scale streaming trajectory (profile +
+generation discovery of a ``--fleet``-sized synthetic population under a
+``--budget-mb`` peak-RSS budget) and appends the throughput record to
+``benchmarks/BENCH_streaming.json``:
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py --bench-streaming \\
+        --fleet 1000000 --chunk 4096 --budget-mb 4096
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 from pathlib import Path
@@ -23,6 +34,22 @@ from pathlib import Path
 import numpy as np
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def backend_tag() -> str:
+    """The actual execution backend of this process, for benchmark rows:
+    ``<jax backend>-pallas[-interpret]`` or ``<jax backend>-ref`` (jnp oracle
+    kernels under REPRO_FORCE_REF=1).  Replaces the old hardcoded
+    ``interpret-mode`` literal, which claimed interpret-mode even in the
+    oracle CI leg."""
+    import jax
+
+    from repro.kernels import ops
+    plat = jax.default_backend()
+    if not ops.use_pallas():
+        return f"{plat}-ref"
+    return f"{plat}-pallas-interpret" if ops.interpret_mode() \
+        else f"{plat}-pallas"
 
 
 def _bench(fn, *args, iters=3, **kw):
@@ -269,17 +296,147 @@ def memsim_grid_speedup(n_dimms: int = 3, n_requests: int = 250,
             "results_match": match}
 
 
+def stream_profile_speedup(n_sizes: int = 10, chunk_size: int = 8,
+                           seed: int = 3) -> dict:
+    """Wall-clock: streamed chunked profiling of a STREAM of differently-
+    sized synthetic fleets vs the dense per-fleet path.
+
+    The dense population program re-lowers once per distinct fleet size D
+    (a fresh XLA compile each); the streamed path clone-pads every chunk to
+    ONE shape, so the chunk program compiles exactly once and serves every
+    fleet — the fixed-compile half of ``core/streaming``'s contract (the
+    fixed-memory half is the peak-RSS regression test).  Per-fleet tables
+    must be BIT-identical, and the streamed pass must have lowered exactly
+    one chunk program.
+    """
+    from repro.core import substrate
+    from repro.core.geometry import TINY
+    from repro.core.population import synthetic_fleet
+    from repro.core.streaming import stream_profile_population
+    from repro.core.substrate import profile_population_arrays
+
+    sizes = (5, 6, 7, 9, 10, 11, 13, 14, 15, 17)[:n_sizes]
+    fleets = [synthetic_fleet(n, TINY, seed=seed) for n in sizes]
+
+    jits_before = len(substrate._CHUNK_JIT_CACHE)
+    t0 = time.time()
+    streamed = [stream_profile_population(f, chunk_size=chunk_size,
+                                          collect=True)["tables"]
+                for f in fleets]
+    t_stream = time.time() - t0
+    new_jits = len(substrate._CHUNK_JIT_CACHE) - jits_before
+
+    t0 = time.time()
+    dense = [np.asarray(profile_population_arrays(f.materialize()))
+             for f in fleets]
+    t_dense = time.time() - t0
+
+    match = all(np.array_equal(s, d) for s, d in zip(streamed, dense))
+    return {"n_fleets": len(sizes), "n_dimms_total": int(sum(sizes)),
+            "chunk_size": chunk_size,
+            "streamed_ms": round(t_stream * 1e3, 1),
+            "dense_ms": round(t_dense * 1e3, 1),
+            "speedup": round(t_dense / max(t_stream, 1e-9), 1),
+            "chunk_programs_compiled": new_jits,
+            "results_match": match}
+
+
+def bench_streaming(n_dimms: int, chunk_size: int, budget_mb: int,
+                    out_path: Path) -> dict:
+    """The committed bench trajectory: profile + discover a synthetic fleet
+    of ``n_dimms`` DIMMs through the streaming substrate in fixed memory,
+    append the throughput record to ``BENCH_streaming.json``.
+
+    Parity is asserted on a 64-DIMM prefix fleet against the dense path
+    (bit-identical tables) before timing, and ``peak_rss_mb`` (the whole
+    process, fleet synthesis included) must stay under ``budget_mb`` — the
+    documented fixed-memory budget.
+    """
+    import resource
+
+    from repro.core.geometry import TINY
+    from repro.core.population import synthetic_fleet
+    from repro.core.streaming import (stream_discover_generations,
+                                      stream_profile_population)
+    from repro.core.substrate import profile_population_arrays
+
+    prefix = synthetic_fleet(64, TINY, seed=0)
+    got = stream_profile_population(prefix, chunk_size=chunk_size,
+                                    collect=True)["tables"]
+    want = np.asarray(profile_population_arrays(prefix.materialize()))
+    parity = bool(np.array_equal(got, want))
+    if not parity:
+        sys.exit("FAIL: streamed prefix tables != dense tables")
+
+    fleet = synthetic_fleet(n_dimms, TINY, seed=0)
+    t0 = time.time()
+    prof = stream_profile_population(fleet, chunk_size=chunk_size)
+    t_profile = time.time() - t0
+    t0 = time.time()
+    disc = stream_discover_generations(fleet, chunk_size=chunk_size,
+                                       collect_labels=False)
+    t_discover = time.time() - t0
+
+    peak_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    entry = {
+        "date": time.strftime("%Y-%m-%d"),
+        "backend": backend_tag(),
+        "geometry": "TINY",
+        "n_dimms": int(n_dimms),
+        "chunk_size": int(prof["chunk_size"]),
+        "n_chunks": int(prof["n_chunks"]),
+        "profile_s": round(t_profile, 2),
+        "profile_dimms_per_s": round(n_dimms / max(t_profile, 1e-9)),
+        "discover_s": round(t_discover, 2),
+        "discover_dimms_per_s": round(n_dimms / max(t_discover, 1e-9)),
+        "n_generations": int(disc["n_generations"]),
+        "fastest_trcd_serial": int(prof["tables_min"]["serial"][0]),
+        "budget_mb": int(budget_mb),
+        "peak_rss_mb": round(peak_mb, 1),
+        "prefix_parity": parity,
+    }
+    history = []
+    if out_path.exists():
+        history = json.loads(out_path.read_text())
+    history.append(entry)
+    out_path.write_text(json.dumps(history, indent=2) + "\n")
+    print(json.dumps(entry, indent=2))
+    if peak_mb > budget_mb:
+        sys.exit(f"FAIL: peak RSS {peak_mb:.0f} MB exceeds the "
+                 f"{budget_mb} MB budget")
+    print(f"OK: {n_dimms} DIMMs profiled + discovered in "
+          f"{peak_mb:.0f} MB (budget {budget_mb} MB), trajectory -> "
+          f"{out_path}")
+    return entry
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="batched-vs-legacy-loop speedup gates only")
     ap.add_argument("--dimms", type=int, default=8)
+    ap.add_argument("--bench-streaming", action="store_true",
+                    help="fleet-scale streaming bench; appends to "
+                         "BENCH_streaming.json")
+    ap.add_argument("--fleet", type=int, default=1_000_000,
+                    help="fleet size for --bench-streaming")
+    ap.add_argument("--chunk", type=int, default=4096,
+                    help="chunk size for --bench-streaming")
+    ap.add_argument("--budget-mb", type=int, default=4096,
+                    help="peak-RSS budget for --bench-streaming")
+    ap.add_argument("--out", default=str(Path(__file__).parent
+                                         / "BENCH_streaming.json"))
     args = ap.parse_args()
 
+    if args.bench_streaming:
+        bench_streaming(args.fleet, args.chunk, args.budget_mb,
+                        Path(args.out))
+        return
     if not args.smoke:
         # microbenchmark mode: report kernel timings, no gating
+        tag = backend_tag()
         for k, v in kernels().items():
-            print(f"kernel_{k},{v},interpret-mode")
+            print(f"kernel_{k},{v},backend={tag}")
         return
     s = profile_population_speedup(args.dimms)
     for k, v in s.items():
@@ -333,6 +490,22 @@ def main() -> None:
     print(f"OK: memsim system_speedup_population {ms['speedup']}x faster "
           f"than the per-request reference walker on {ms['n_dimms']} tables, "
           f"bit-identical speedups")
+    sp = stream_profile_speedup()
+    for k, v in sp.items():
+        print(f"stream_profile_{k},{v}")
+    if not sp["results_match"]:
+        sys.exit("FAIL: streamed chunked tables != dense tables "
+                 "(must be bit-identical at any chunk size)")
+    if sp["chunk_programs_compiled"] > 1:
+        sys.exit(f"FAIL: streamed pass lowered "
+                 f"{sp['chunk_programs_compiled']} chunk programs for "
+                 f"{sp['n_fleets']} fleet sizes; the clone-padded chunk "
+                 "must compile exactly once")
+    if sp["speedup"] < 5.0:
+        sys.exit(f"FAIL: streaming speedup {sp['speedup']}x < 5x target")
+    print(f"OK: stream_profile_population {sp['speedup']}x faster than "
+          f"dense per-size re-lowering over {sp['n_fleets']} fleet sizes, "
+          f"one compiled chunk program, bit-identical tables")
 
 
 if __name__ == "__main__":

@@ -45,6 +45,17 @@ def validate_row(line: str) -> str | None:
         return f"empty derived field: {line!r}"
     if "=" not in derived.split(";", 1)[0]:
         return f"derived field without key=value lead: {derived!r}"
+    if name.startswith("kernel_"):
+        # kernel rows must say which backend actually ran them — a real
+        # ``backend=<platform>-<mode>`` tag, not the legacy hardcoded
+        # ``interpret-mode`` literal (which lied in the oracle CI leg)
+        m = re.search(r"(?:^|;)backend=([^;]*)", derived)
+        if not m:
+            return f"kernel row without backend= column: {line!r}"
+        tag = m.group(1)
+        if tag == "interpret-mode" \
+                or not re.fullmatch(r"[a-z0-9]+(-[a-z0-9]+)*", tag):
+            return f"kernel row with legacy/malformed backend {tag!r}: {line!r}"
     return None
 
 
@@ -78,9 +89,10 @@ def main() -> None:
         emit(f"{name},{wall * 1e6:.0f},{blob}")
 
     if not args.skip_kernels and (not args.only or "kernel" in args.only):
-        from benchmarks.kernel_bench import kernels
+        from benchmarks.kernel_bench import backend_tag, kernels
+        tag = backend_tag()
         for k, v in kernels().items():
-            emit(f"kernel_{k},{v},backend=interpret-mode")
+            emit(f"kernel_{k},{v},backend={tag}")
 
     if args.check:
         if failures:

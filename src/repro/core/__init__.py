@@ -8,4 +8,12 @@ from repro.core.profiling import (ALDRAM, DivaProfiler, conventional_profile,
                                   profiling_time_s)
 from repro.core.substrate import (DimmBatch, lifetime_population,
                                   profile_population, shuffling_gain_population)
+from repro.core.population import synthetic_fleet
+from repro.core.packing import (CountAccumulator, PackedBoolGrid,
+                                narrow_counts, pack_bool, unpack_bool)
+from repro.core.streaming import (PopulationStream, stream_discover_generations,
+                                  stream_error_summary,
+                                  stream_lifetime_population, stream_population,
+                                  stream_profile_population,
+                                  stream_shuffling_gain)
 from repro.core import ecc, shuffling, spice, ramlite

@@ -127,6 +127,20 @@ def trace_uniform(seed, idx, lane, xp=np):
     return (h >> 8).astype(xp.float32) * xp.float32(1.0 / (1 << 24))
 
 
+def fleet_uniform(seed, serial, lane, xp=np):
+    """Deterministic uniform in [0, 1) for one synthetic-fleet leaf draw of
+    ``population.synthetic_fleet`` — a sibling stream of ``query_uniform``
+    with fresh mixing constants, keyed by (fleet seed, DIMM serial, leaf
+    lane) and never by chunk position: a chunked fleet generator emits the
+    same DIMM bits at any chunk size (the global-index RNG rule, applied to
+    population *synthesis*)."""
+    u32 = lambda v: xp.asarray(v, xp.uint32)
+    h = u32(seed) * xp.uint32(_GOLD)
+    h = _mix32(h ^ (u32(serial) * xp.uint32(0x2545F491)), xp)
+    h = _mix32(h ^ (u32(lane) * xp.uint32(0x9E6D62D9)), xp)
+    return (h >> 8).astype(xp.float32) * xp.float32(1.0 / (1 << 24))
+
+
 def mix_uniform(seed, draw, core, xp=np):
     """Deterministic uniform in [0, 1) for one multi-core workload-mix pick of
     ``ramlite.speedup_summary`` (Sec 6.3's 32 random mixes).  A dedicated hash
@@ -426,8 +440,13 @@ def _pad0(a, pad: int):
     DIMM's and every kept DIMM's draws are untouched."""
     if pad == 0:
         return a
-    a = jnp.asarray(a)
-    return jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)], axis=0)
+    if isinstance(a, jax.Array):  # device arrays / tracers stay on device
+        return jnp.concatenate([a, jnp.repeat(a[-1:], pad, axis=0)], axis=0)
+    # host arrays pad in numpy: eager jnp here would compile (and cache) a
+    # tiny XLA program PER (width, pad) shape — ~0.3 s of pure overhead the
+    # first time each ragged-tail shape appears in a streaming scan
+    a = np.asarray(a)
+    return np.concatenate([a, np.repeat(a[-1:], pad, axis=0)], axis=0)
 
 
 def _run_sharded(name: str, mesh, impl, args, statics: dict,
@@ -470,6 +489,30 @@ def _dispatch(name: str, mesh, impl, jitted, args, statics: dict,
     if mesh is None:
         return jitted(*args, **statics)
     return _run_sharded(name, mesh, impl, args, statics, batch_argnums)
+
+
+_CHUNK_JIT_CACHE: dict = {}
+
+
+def _chunk_jitted(name: str, impl, statics: dict, donate: tuple):
+    """Cached donating jit of one chunk program for the streaming driver
+    (``core/streaming.py``).
+
+    ``donate`` names the chunk-shaped positional args (the DimmBatch pytree
+    and its per-chunk companions): their buffers are donated to XLA, so each
+    chunk's arrays are released for reuse as soon as the program consumes
+    them — the peak-memory lever of the streaming scan.  Shared args (row
+    regions, pattern stress) are NEVER donated: the driver reuses them across
+    every chunk.  The cache key is (entry point, statics, donate), i.e. one
+    compiled program per chunk *shape*, reused for every chunk and every
+    population size — the dense path re-lowers per population size instead.
+    """
+    key = (name, tuple(sorted(statics.items())), donate)
+    prog = _CHUNK_JIT_CACHE.get(key)
+    if prog is None:
+        prog = _CHUNK_JIT_CACHE[key] = jax.jit(
+            functools.partial(impl, **statics), donate_argnums=donate)
+    return prog
 
 
 def _resolve_rows(region, geom: DimmGeometry, n_dimms: int | None = None

@@ -17,7 +17,8 @@ table, without geometry metadata.  Sec 5.3 / Figs 10-11 of the paper.
                       ``profile_population``).
 """
 from repro.discovery.blind import BlindDiscovery, BlindDiva
-from repro.discovery.generation import (canonical_internal_profiles,
+from repro.discovery.generation import (StreamingGenerations,
+                                        canonical_internal_profiles,
                                         cluster_generations, vulnerable_rows)
 from repro.discovery.recover import (recover_mapping_loop,
                                      recover_mapping_population, vote_mapping)
@@ -25,8 +26,9 @@ from repro.discovery.signatures import (bit_signature_population,
                                         signature_features)
 
 __all__ = [
-    "BlindDiscovery", "BlindDiva", "bit_signature_population",
-    "canonical_internal_profiles", "cluster_generations",
-    "recover_mapping_loop", "recover_mapping_population",
-    "signature_features", "vote_mapping", "vulnerable_rows",
+    "BlindDiscovery", "BlindDiva", "StreamingGenerations",
+    "bit_signature_population", "canonical_internal_profiles",
+    "cluster_generations", "recover_mapping_loop",
+    "recover_mapping_population", "signature_features", "vote_mapping",
+    "vulnerable_rows",
 ]

@@ -47,21 +47,33 @@ def cluster_generations(features: np.ndarray, threshold: float = 0.85
 
 
 def canonical_internal_profiles(counts: np.ndarray, est_ext_to_int: np.ndarray,
-                                labels: np.ndarray) -> np.ndarray:
+                                labels: np.ndarray,
+                                combine: str = "median") -> np.ndarray:
     """(G, R) canonical per-generation internal error profiles: every member
     subarray's observed external counts scattered back through its recovered
-    mapping, combined by the per-row MEDIAN over the generation's
-    member-subarrays.  For a correctly recovered generation this re-exposes
-    the design profile the scramble hid — the paper's 'same design, same
-    vulnerable regions' made concrete.  The median (not mean) is what makes
-    the canonical map robust to per-DIMM randomness: a post-manufacturing
-    row repair gives one member-subarray a hot replacement-row profile at a
-    random row, which a mean would smear into a spurious vulnerable row."""
+    mapping, combined per row over the generation's member-subarrays.  For a
+    correctly recovered generation this re-exposes the design profile the
+    scramble hid — the paper's 'same design, same vulnerable regions' made
+    concrete.
+
+    ``combine="median"`` (default) is what makes the canonical map robust to
+    per-DIMM randomness: a post-manufacturing row repair gives one
+    member-subarray a hot replacement-row profile at a random row, which a
+    mean would smear into a spurious vulnerable row.  ``combine="mean"`` is
+    the online-computable alternative the streaming clusterer
+    (``StreamingGenerations``) accumulates as exact integer sums: for
+    integer counts the two paths' means agree bit for bit (integer
+    arithmetic in f64 is exact below 2**53), which is the streamed
+    discovery's parity anchor."""
+    if combine not in ("median", "mean"):
+        raise ValueError(f"combine must be 'median' or 'mean', "
+                         f"got {combine!r}")
     counts = np.asarray(counts, np.float64)
     est = np.asarray(est_ext_to_int)
     labels = np.asarray(labels)
     D, S, R = counts.shape
     G = int(labels.max()) + 1 if labels.size else 0
+    fold = np.median if combine == "median" else np.mean
     out = np.zeros((G, R))
     for g in range(G):
         members = np.flatnonzero(labels == g)
@@ -69,8 +81,146 @@ def canonical_internal_profiles(counts: np.ndarray, est_ext_to_int: np.ndarray,
         for j, d in enumerate(members):
             for s in range(S):
                 scat[j * S + s, est[d, s]] = counts[d, s]
-        out[g] = np.median(scat, axis=0) if scat.size else 0.0
+        out[g] = fold(scat, axis=0) if scat.size else 0.0
     return out
+
+
+class StreamingGenerations:
+    """Incremental greedy leader clustering over population chunks — the
+    streaming form of ``cluster_generations`` + mean-combine
+    ``canonical_internal_profiles`` + ``vulnerable_rows``, state bounded by
+    the number of GENERATIONS (small), never the number of DIMMs.
+
+    ``update`` consumes one chunk of (C, F) features (chunks must arrive in
+    serial order) and returns provisional labels; zero-feature DIMMs carry
+    ``-1`` until ``finalize``/``resolve_labels`` assigns the shared
+    trailing cluster — its index is the final leader count, which a
+    streaming pass cannot know mid-scan (the dense clusterer assigns it at
+    the end of its walk for the same reason).  Label parity with the dense
+    clusterer holds because leaders are compared in creation order and a
+    chunk boundary never reorders the walk.
+
+    Canonical profiles accumulate as EXACT int64 row sums (optionally
+    scattered through per-subarray ``est`` maps), so ``finalize``'s mean
+    profiles are bit-identical to the dense
+    ``canonical_internal_profiles(..., combine="mean")`` at any chunk size.
+    """
+
+    def __init__(self, threshold: float = 0.85):
+        self.threshold = float(threshold)
+        self._leaders: list[np.ndarray] = []
+        self._sums: list[np.ndarray] = []       # per-gen (R,) int64
+        self._profiles: list[int] = []          # per-gen member-subarray count
+        self._members: list[int] = []
+        self._zero_sum: np.ndarray | None = None
+        self._zero_profiles = 0
+        self._zero_members = 0
+        self._rows: int | None = None
+
+    @property
+    def n_leaders(self) -> int:
+        return len(self._leaders)
+
+    def _match(self, feat: np.ndarray) -> int:
+        for g, lead in enumerate(self._leaders):
+            if float(feat @ lead) >= self.threshold:
+                return g
+        self._leaders.append(feat)
+        self._sums.append(None)
+        self._profiles.append(0)
+        self._members.append(0)
+        return len(self._leaders) - 1
+
+    def update(self, features: np.ndarray, counts: np.ndarray | None = None,
+               est_ext_to_int: np.ndarray | None = None) -> np.ndarray:
+        """Fold one chunk; returns (C,) provisional labels (-1 = zero
+        feature).  ``counts`` (C, S, R) integer campaign counts feed the
+        exact canonical sums; ``est_ext_to_int`` (C, S, R) scatters each
+        member subarray through its recovered mapping (identity when
+        omitted — external-order canonicals)."""
+        feats = np.asarray(features, np.float64)
+        zero = np.linalg.norm(feats, axis=1) == 0
+        labels = np.full(feats.shape[0], -1, np.int64)
+        # vectorized prefilter: rows matching a leader that existed at chunk
+        # start take the FIRST such hit — exactly the serial walk's answer,
+        # since leaders born later in the chunk only get larger indices
+        n_old = len(self._leaders)
+        if n_old:
+            sims = feats @ np.stack(self._leaders).T       # (C, n_old)
+            hits = sims >= self.threshold
+            has_hit = hits.any(axis=1)
+            first = hits.argmax(axis=1)
+        for d in range(feats.shape[0]):
+            if zero[d]:
+                continue
+            if n_old and has_hit[d]:
+                labels[d] = first[d]
+            else:
+                labels[d] = self._match(feats[d])
+        if counts is not None:
+            self._accumulate(labels, counts, est_ext_to_int)
+        for g in labels[labels >= 0]:
+            self._members[g] += 1
+        self._zero_members += int(zero.sum())
+        return labels
+
+    def _accumulate(self, labels, counts, est) -> None:
+        counts = np.asarray(counts)
+        if not np.issubdtype(counts.dtype, np.integer):
+            raise TypeError("canonical sums are exact-integer only; "
+                            f"got dtype {counts.dtype}")
+        D, S, R = counts.shape
+        if self._rows is None:
+            self._rows = R
+        if est is None:
+            est = np.broadcast_to(np.arange(R), (D, S, R))
+        c64 = counts.astype(np.int64)
+        for g in range(len(self._sums)):
+            if self._sums[g] is None:
+                self._sums[g] = np.zeros(R, np.int64)
+        if self._zero_sum is None:
+            self._zero_sum = np.zeros(R, np.int64)
+        for d in range(D):
+            tgt = self._zero_sum if labels[d] < 0 else self._sums[labels[d]]
+            np.add.at(tgt, np.asarray(est[d]).reshape(-1), c64[d].reshape(-1))
+            if labels[d] < 0:
+                self._zero_profiles += S
+            else:
+                self._profiles[labels[d]] += S
+
+    def resolve_labels(self, labels: np.ndarray) -> np.ndarray:
+        """Provisional -1 labels -> the shared zero-feature cluster index
+        (the final leader count, dense-clusterer convention)."""
+        labels = np.asarray(labels, np.int64).copy()
+        labels[labels < 0] = len(self._leaders)
+        return labels
+
+    def finalize(self, k_rows: int = 2) -> dict:
+        """Close the scan: exact mean canonical profiles (generations in
+        creation order, the zero-feature cluster trailing when present) and
+        each generation's discovered vulnerable rows."""
+        sums = list(self._sums)
+        profiles = list(self._profiles)
+        members = list(self._members)
+        if self._zero_members:
+            sums.append(self._zero_sum)
+            profiles.append(self._zero_profiles)
+            members.append(self._zero_members)
+        R = self._rows
+        canonical = None
+        if R is not None:
+            canonical = np.zeros((len(sums), R))
+            for g, (s, n) in enumerate(zip(sums, profiles)):
+                if s is not None and n:
+                    canonical[g] = s.astype(np.float64) / n
+        out = {"n_generations": len(self._leaders),
+               "members": np.asarray(members, np.int64),
+               "n_profiles": np.asarray(profiles, np.int64),
+               "canonical": canonical}
+        if canonical is not None:
+            out["vulnerable_rows"] = [vulnerable_rows(p, k=k_rows)
+                                      for p in canonical]
+        return out
 
 
 def onset_profile(profiles: np.ndarray, min_count: float = 32.0) -> np.ndarray:

@@ -232,8 +232,16 @@ def timing_cycles_banks(timing, banks: int) -> np.ndarray:
 N_TRACES = 0
 N_TRACE_BUILDS = 0
 
+# Hard bound on the (n_requests, banks, seed) -> stacked-trace cache: each
+# entry holds W device-resident trace arrays, so an UNBOUNDED cache grows
+# host+device memory linearly with every distinct tuple a long sweep touches.
+# 16 covers every in-repo sweep (fig19 + tests use a handful of tuples, and
+# within one sweep the tuple is constant — N_TRACE_BUILDS must not move);
+# beyond it, least-recently-used entries are evicted and rebuilt on return.
+TRACE_CACHE_MAX = 16
 
-@functools.lru_cache(maxsize=16)
+
+@functools.lru_cache(maxsize=TRACE_CACHE_MAX)
 def _stack_traces_cached(n_requests: int, banks: int, seed: int) -> dict:
     global N_TRACE_BUILDS
     N_TRACE_BUILDS += 1

@@ -65,6 +65,28 @@ def dimm_mesh(n_devices: int | None = None) -> Mesh:
     return Mesh(np.asarray(devs[:n]), ("dimms",))
 
 
+def chunk_spans(n_dimms: int, chunk_size: int,
+                mesh: Mesh | None = None) -> list[tuple[int, int]]:
+    """[lo, hi) population spans for a chunked (streaming) scan.
+
+    The chunk-over-mesh composition rule: when a chunk is itself sharded over
+    a DIMM-axis ``mesh``, the chunk size is rounded UP to a multiple of the
+    mesh's device count, so every full chunk splits evenly over the devices
+    and only the final ragged chunk ever needs the clone-padding of
+    ``substrate._run_sharded``.  With no mesh the spans are plain fixed-size
+    chunks.  Spans tile [0, n_dimms) exactly, in serial order — the order the
+    streaming reductions and the incremental generation clusterer rely on.
+    """
+    if n_dimms < 0 or chunk_size <= 0:
+        raise ValueError(f"need n_dimms >= 0 < chunk_size; got "
+                         f"({n_dimms}, {chunk_size})")
+    if mesh is not None:
+        n_dev = int(mesh.devices.size)
+        chunk_size += (-chunk_size) % n_dev
+    return [(lo, min(lo + chunk_size, n_dimms))
+            for lo in range(0, n_dimms, chunk_size)]
+
+
 # name -> axis request per trailing dim. "m"=model, "f"=fsdp(data), None=replicate
 _RULES: dict[str, tuple] = {
     # embeddings / head

@@ -31,3 +31,12 @@ def test_diva_characterization_fast_path(capsys):
     assert "re-profiling follows the drift" in out
     assert "blind vs oracle timing agreement" in out
     assert "DivaProfiler(discovery=...)" in out
+
+
+def test_fleet_stream_fast_path(capsys):
+    _load("fleet_stream").main(fast=True)
+    out = capsys.readouterr().out
+    assert "the fleet is never resident" in out
+    assert "fleet min" in out and "max" in out
+    assert "design generations discovered" in out
+    assert "peak memory is one chunk" in out

@@ -313,3 +313,25 @@ def test_mix_stream_is_dedicated_and_deterministic():
     b = sim.speedup_summary(TABLES[0], STANDARD, ipcs=ipcs, seed=1)
     assert a["mean_weighted_speedup"] != b["mean_weighted_speedup"]
     assert a["per_workload_speedup"] == b["per_workload_speedup"]
+
+
+def test_trace_cache_is_bounded_and_evicts_lru():
+    """Satellite: the (n_requests, banks, seed) -> stacked-trace cache is
+    hard-bounded at TRACE_CACHE_MAX (device-resident entries would otherwise
+    grow without limit over a long sweep), evicting least-recently-used
+    tuples — which rebuild on return — while tuples inside the bound stay
+    build-free (the no-rebuild-within-a-sweep contract of
+    test_speedup_population_no_retrace_no_rebuild)."""
+    assert sim._stack_traces_cached.cache_info().maxsize == sim.TRACE_CACHE_MAX
+    sim._stack_traces_cached.cache_clear()
+    for seed in range(sim.TRACE_CACHE_MAX + 2):   # 2 tuples past the bound
+        sim._stack_traces(16, 1, seed)
+    info = sim._stack_traces_cached.cache_info()
+    assert info.currsize == sim.TRACE_CACHE_MAX
+
+    b0 = sim.N_TRACE_BUILDS
+    sim._stack_traces(16, 1, sim.TRACE_CACHE_MAX + 1)   # most recent: cached
+    assert sim.N_TRACE_BUILDS == b0
+    sim._stack_traces(16, 1, 0)                         # oldest: evicted
+    assert sim.N_TRACE_BUILDS == b0 + 1
+    sim._stack_traces_cached.cache_clear()
