@@ -10,8 +10,11 @@ scramble recovery vs the per-subarray ``estimate_row_mapping`` loop, and one
 fused ``memsim.system_speedup_population`` grid vs the retained per-request
 in-order reference walker (``memsim.reference.system_speedup_loop``), and one
 streamed ``stream_profile_population`` scan over a stream of fleet sizes vs
-the dense path's per-size re-lowering; CI asserts all six stay >= 5x on CPU
-with bit-identical results.
+the dense path's per-size re-lowering, and one batched N-axis
+``operating_grid_arrays`` sweep vs the per-(DIMM, point) NumPy
+``operating_point_eval`` loop; CI asserts all seven stay >= 5x on CPU with
+bit-identical results (decision-for-decision for the operating grid, whose
+lambdas are float32 reductions).
 
     PYTHONPATH=src python benchmarks/kernel_bench.py --smoke
 
@@ -84,6 +87,11 @@ def kernels():
                       np.float32)
     out["fail_prob_8x512x128_us"] = round(
         _bench(ops.fail_prob, row_src, d_mat, coeffs, cols=128), 1)
+    op_coeffs = np.concatenate(
+        [coeffs, np.array([1.2, 4.0, 0.4, 1.0, 0.3, 1.2], np.float32)])
+    out["fail_prob_op_8x512x128_us"] = round(
+        _bench(ops.fail_prob_op, row_src, d_mat, op_coeffs, cols=128,
+               voltage=True, retention=True), 1)
     sig_counts = rng.integers(0, 2 ** 20, (4096, 512)).astype(np.int32)
     out["bit_signature_4096x512_us"] = round(
         _bench(ops.bit_signature, sig_counts, nbits=9), 1)
@@ -296,6 +304,65 @@ def memsim_grid_speedup(n_dimms: int = 3, n_requests: int = 250,
             "results_match": match}
 
 
+def _operating_points():
+    """A small N-axis grid spanning the four operating-point directions:
+    nominal, a voltage step, a retention-stressed refresh/temperature point,
+    and aggressive timings alone and combined with the new axes.  Every
+    coordinate sits exactly on its axis quantization grid."""
+    from repro.core.timing import OperatingPoint, TimingParams
+    return [
+        OperatingPoint(),
+        OperatingPoint(vdd=1.10),
+        OperatingPoint(refresh_ms=256.0, temp_C=75.0),
+        OperatingPoint(timing=TimingParams(11.25, 30.0, 11.25, 12.5)),
+        OperatingPoint(timing=TimingParams(10.0, 27.5, 10.0, 11.25),
+                       vdd=1.25),
+        OperatingPoint(timing=TimingParams(8.75, 25.0, 8.75, 10.0),
+                       refresh_ms=128.0),
+    ]
+
+
+def operating_grid_speedup(n_dimms: int = 8, iters: int = 1) -> dict:
+    """Wall-clock: one jitted N-axis ``operating_grid_arrays`` scan (every
+    DIMM x every operating point, both error channels) vs the per-(DIMM,
+    point) NumPy ``DimmModel.operating_point_eval`` loop on the SAME grid
+    and the SAME ``op_point_key``-keyed Monte-Carlo decisions — identical
+    work, pure batching + the grid lax.scan.  Decisions must match
+    decision-for-decision; lambdas are float32 reductions (tolerance)."""
+    from repro.core.geometry import TINY
+    from repro.core.latency import worst_rows_internal
+    from repro.core.population import make_population
+    from repro.core.substrate import DimmBatch, operating_grid_arrays
+
+    pop = make_population(TINY, n_dimms)
+    batch = DimmBatch.from_population(pop)
+    points = _operating_points()
+    rows = worst_rows_internal(TINY)
+
+    operating_grid_arrays(batch, points)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        grid = operating_grid_arrays(batch, points)
+    t_batched = (time.time() - t0) / iters
+
+    t0 = time.time()
+    for _ in range(iters):
+        legacy = [[d.operating_point_eval(pt, rows) for pt in points]
+                  for d in pop]
+    t_loop = (time.time() - t0) / iters
+
+    match = all(
+        bool(grid["fails"][di, gi]) == legacy[di][gi][0]
+        and np.allclose(grid["lam"][di, gi], legacy[di][gi][1],
+                        rtol=2e-4, atol=1e-7)
+        for di in range(len(pop)) for gi in range(len(points)))
+    return {"n_dimms": len(pop), "n_points": len(points),
+            "batched_ms": round(t_batched * 1e3, 1),
+            "legacy_loop_ms": round(t_loop * 1e3, 1),
+            "speedup": round(t_loop / max(t_batched, 1e-9), 1),
+            "results_match": match}
+
+
 def stream_profile_speedup(n_sizes: int = 10, chunk_size: int = 8,
                            seed: int = 3) -> dict:
     """Wall-clock: streamed chunked profiling of a STREAM of differently-
@@ -377,6 +444,18 @@ def bench_streaming(n_dimms: int, chunk_size: int, budget_mb: int,
                                        collect_labels=False)
     t_discover = time.time() - t0
 
+    # the N-axis operating-point sweep rides the same streaming substrate:
+    # a bounded prefix fleet (the grid multiplies per-DIMM cost by G, so the
+    # sweep is budgeted independently of the headline fleet size)
+    from repro.core.streaming import stream_operating_grid
+    op_fleet = min(n_dimms, 2048)
+    points = _operating_points()
+    t0 = time.time()
+    og = stream_operating_grid(synthetic_fleet(op_fleet, TINY, seed=0),
+                               points, chunk_size=chunk_size)
+    t_op = time.time() - t0
+    op_fail_frac = np.asarray(og["fail_stats"]["mean"], np.float64)
+
     peak_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
     entry = {
         "date": time.strftime("%Y-%m-%d"),
@@ -390,6 +469,12 @@ def bench_streaming(n_dimms: int, chunk_size: int, budget_mb: int,
         "discover_s": round(t_discover, 2),
         "discover_dimms_per_s": round(n_dimms / max(t_discover, 1e-9)),
         "n_generations": int(disc["n_generations"]),
+        "op_grid_points": len(points),
+        "op_fleet": int(op_fleet),
+        "op_sweep_s": round(t_op, 2),
+        "op_sweep_dimm_points_per_s": round(
+            op_fleet * len(points) / max(t_op, 1e-9)),
+        "op_fail_frac_max": round(float(op_fail_frac.max()), 4),
         "fastest_trcd_serial": int(prof["tables_min"]["serial"][0]),
         "budget_mb": int(budget_mb),
         "peak_rss_mb": round(peak_mb, 1),
@@ -506,6 +591,17 @@ def main() -> None:
     print(f"OK: stream_profile_population {sp['speedup']}x faster than "
           f"dense per-size re-lowering over {sp['n_fleets']} fleet sizes, "
           f"one compiled chunk program, bit-identical tables")
+    og = operating_grid_speedup(args.dimms)
+    for k, v in og.items():
+        print(f"operating_grid_{k},{v}")
+    if not og["results_match"]:
+        sys.exit("FAIL: batched N-axis operating grid != per-point NumPy "
+                 "loop (decisions must match decision-for-decision)")
+    if og["speedup"] < 5.0:
+        sys.exit(f"FAIL: operating-grid speedup {og['speedup']}x < 5x target")
+    print(f"OK: operating_grid_arrays {og['speedup']}x faster than the "
+          f"per-(DIMM, point) loop on {og['n_dimms']} DIMMs x "
+          f"{og['n_points']} operating points, matching decisions")
 
 
 if __name__ == "__main__":

@@ -5,14 +5,16 @@ key=value report of the figure's quantities vs the paper's claims).
 
     PYTHONPATH=src python -m benchmarks.run [--only fig18] [--check]
 
-``--check`` validates every emitted row against the CSV schema and exits
-nonzero on the first malformed one — the CI guard that keeps downstream
-scrapers (EXPERIMENTS.md tooling, dashboards) from silently ingesting a
-broken figure row.
+``--check`` validates every emitted row against the CSV schema AND every
+committed ``benchmarks/BENCH_*.json`` trajectory file against the bench
+entry schema, exiting nonzero on any violation — the CI guard that keeps
+downstream scrapers (EXPERIMENTS.md tooling, dashboards) from silently
+ingesting a broken figure row or a hand-mangled bench trajectory.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import re
 import sys
 from pathlib import Path
@@ -59,6 +61,73 @@ def validate_row(line: str) -> str | None:
     return None
 
 
+# Required keys of every BENCH_*.json trajectory entry, with accepted JSON
+# types.  Optional per-bench keys (discovery counters, the operating-point
+# sweep block, ...) are allowed on top; the required core is what every
+# appender writes and what the dashboards key on.
+_BENCH_SCHEMA: dict[str, type | tuple] = {
+    "date": str, "backend": str, "geometry": str, "n_dimms": int,
+    "chunk_size": int, "n_chunks": int, "profile_s": (int, float),
+    "budget_mb": int, "peak_rss_mb": (int, float), "prefix_parity": bool,
+}
+_BENCH_DATE_RE = re.compile(r"^\d{4}-\d{2}-\d{2}$")
+_BENCH_BACKEND_RE = re.compile(r"^[a-z0-9]+(-[a-z0-9]+)*$")
+
+
+def validate_bench_entry(entry, where: str) -> list[str]:
+    """Schema check for one BENCH trajectory entry; returns error strings."""
+    if not isinstance(entry, dict):
+        return [f"{where}: entry is not a JSON object"]
+    errs = []
+    for key, typ in _BENCH_SCHEMA.items():
+        if key not in entry:
+            errs.append(f"{where}: missing required key {key!r}")
+            continue
+        val = entry[key]
+        # bool is an int subclass in Python; a true/false n_dimms is malformed
+        if isinstance(val, bool) and typ is not bool:
+            errs.append(f"{where}: {key}={val!r} must be {typ}, got bool")
+        elif not isinstance(val, typ):
+            errs.append(f"{where}: {key}={val!r} is not {typ}")
+    if errs:
+        return errs
+    if not _BENCH_DATE_RE.match(entry["date"]):
+        errs.append(f"{where}: malformed date {entry['date']!r}")
+    if not _BENCH_BACKEND_RE.match(entry["backend"]):
+        errs.append(f"{where}: malformed backend tag {entry['backend']!r} "
+                    "(want <platform>-<mode>, e.g. cpu-pallas-interpret)")
+    for key in ("n_dimms", "chunk_size", "n_chunks"):
+        if entry[key] <= 0:
+            errs.append(f"{where}: {key}={entry[key]} must be positive")
+    for key in ("profile_s", "peak_rss_mb"):
+        if entry[key] < 0:
+            errs.append(f"{where}: negative {key}={entry[key]}")
+    return errs
+
+
+def check_bench_files(bench_dir: Path) -> list[str]:
+    """Validate every committed ``BENCH_*.json`` under ``bench_dir``.
+
+    Zero matching files is itself an error — the committed trajectory exists,
+    so an empty glob means the check is looking in the wrong place."""
+    files = sorted(bench_dir.glob("BENCH_*.json"))
+    if not files:
+        return [f"no BENCH_*.json files under {bench_dir}"]
+    errs = []
+    for path in files:
+        try:
+            history = json.loads(path.read_text())
+        except ValueError as e:
+            errs.append(f"{path.name}: invalid JSON: {e}")
+            continue
+        if not isinstance(history, list) or not history:
+            errs.append(f"{path.name}: trajectory must be a non-empty list")
+            continue
+        for i, entry in enumerate(history):
+            errs.extend(validate_bench_entry(entry, f"{path.name}[{i}]"))
+    return errs
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="substring filter")
@@ -95,9 +164,14 @@ def main() -> None:
             emit(f"kernel_{k},{v},backend={tag}")
 
     if args.check:
+        bench_errs = check_bench_files(Path(__file__).parent)
+        for err in bench_errs:
+            print(f"MALFORMED BENCH ENTRY: {err}", file=sys.stderr)
+        failures.extend(bench_errs)
         if failures:
-            sys.exit(f"--check: {len(failures)} malformed row(s)")
-        print("--check: all rows conform to name,us_per_call,derived",
+            sys.exit(f"--check: {len(failures)} schema violation(s)")
+        print("--check: all rows conform to name,us_per_call,derived and "
+              "all BENCH_*.json trajectories conform to the bench schema",
               file=sys.stderr)
 
 

@@ -1,19 +1,25 @@
 """DIVA-DRAM core: the paper's contribution, faithfully simulated in JAX."""
-from repro.core.timing import CYCLE_NS, PARAMS, STANDARD, TimingParams, timing_grid
+from repro.core.timing import (AXES, CYCLE_NS, EXTENDED_AXES, PARAMS, STANDARD,
+                               VDD_STD, AxisSpec, OperatingPoint, TimingParams,
+                               energy_proxy, timing_grid)
 from repro.core.geometry import DimmGeometry, FULL, SMALL, TINY, RowScramble
 from repro.core.latency import VendorModel, vendor_models, t_req_grid, fail_probability
 from repro.core.errors import DimmModel, vulnerability_ratio
 from repro.core.profiling import (ALDRAM, DivaProfiler, conventional_profile,
-                                  diva_profile, latency_reduction, lifetime_loop,
+                                  diva_operating_point, diva_profile,
+                                  latency_reduction, lifetime_loop,
                                   profiling_time_s)
 from repro.core.substrate import (DimmBatch, lifetime_population,
+                                  operating_grid_arrays,
+                                  operating_points_population,
                                   profile_population, shuffling_gain_population)
 from repro.core.population import synthetic_fleet
 from repro.core.packing import (CountAccumulator, PackedBoolGrid,
                                 narrow_counts, pack_bool, unpack_bool)
 from repro.core.streaming import (PopulationStream, stream_discover_generations,
                                   stream_error_summary,
-                                  stream_lifetime_population, stream_population,
+                                  stream_lifetime_population,
+                                  stream_operating_grid, stream_population,
                                   stream_profile_population,
                                   stream_shuffling_gain)
 from repro.core import ecc, shuffling, spice, ramlite

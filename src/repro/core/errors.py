@@ -24,10 +24,15 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.geometry import DimmGeometry, burst_bit_to_mat
-from repro.core.latency import (DEFAULT_ITERS, DEFAULT_PATTERNS, VendorModel,
-                                fail_mixture, multibit_tail, t_req_grid)
+from repro.core.latency import (DEFAULT_ITERS, DEFAULT_PATTERNS,
+                                PATTERN_STRESS, VendorModel, access_vdd_shift,
+                                condition_adder, design_slowness_grid,
+                                fail_mixture, multibit_tail,
+                                retention_fail_mixture, retention_stress,
+                                t_req_grid)
 from repro.core.substrate import quantize_t, query_uniform
-from repro.core.timing import PARAMS
+from repro.core.timing import (AXES, OP_GRID_LANE, PARAMS, VDD_STD,
+                               OperatingPoint, op_point_key)
 
 
 @dataclass
@@ -226,6 +231,94 @@ class DimmModel:
                 multibit_only=multibit_only):
             lams[sub, pi] = lam
         return lams
+
+    def _op_lam_iter(self, op: "OperatingPoint", internal_rows, *, patterns,
+                     iters, multibit_only, retention):
+        """Lazily yield (sub, pat_idx, lam) for one full operating point:
+        the access channel summed over ALL four timing parameters at the
+        point's table values plus (optionally) the retention channel — the
+        per-point loop reference for ``substrate._op_region_eval`` (same
+        float32 op order, modulo reduction-order ulps)."""
+        g = self.geom
+        R = g.rows_per_mat
+        shift = access_vdd_shift(self.vendor.vdd_coef, op.vdd)
+        x = retention_stress(op.temp_C, op.refresh_ms, op.vdd)
+        rows = np.asarray(internal_rows)
+        f32 = np.float32
+        for sub in range(g.subarrays):
+            src = np.where(self.repaired[sub], self.repair_perm[sub],
+                           np.arange(R))
+            rsel = src[rows]
+            for pi, pat in enumerate(patterns):
+                lam = f32(0.0)
+                for p in PARAMS:
+                    t = t_req_grid(g, self.vendor, p, temp_C=op.temp_C,
+                                   refresh_ms=op.refresh_ms,
+                                   age_years=self.age_years, pattern=pat)
+                    t = t + f32(shift)
+                    t = t + f32(self.chip_offsets[0])
+                    t = t + f32(self.sub_offsets[sub])
+                    pr = fail_mixture(t, f32(getattr(op.timing, p)),
+                                      f32(self.vendor.sigma),
+                                      f32(self.vendor.outlier_rate),
+                                      f32(self.vendor.outlier_ns))
+                    lam = lam + self._channel_lam(pr[:, rsel, :], iters,
+                                                  multibit_only)
+                if retention:
+                    slow = design_slowness_grid(g, self.vendor, "tras",
+                                                pattern=pat)
+                    pr = retention_fail_mixture(
+                        slow, f32(self.vendor.ret_base),
+                        f32(self.vendor.ret_k), x,
+                        f32(self.vendor.ret_sigma),
+                        f32(self.vendor.outlier_rate),
+                        f32(self.vendor.ret_drop))
+                    lam = lam + self._channel_lam(pr[:, rsel, :], iters,
+                                                  multibit_only)
+                yield sub, pi, f32(lam)
+
+    def _channel_lam(self, region, iters, multibit_only) -> np.float32:
+        if multibit_only:
+            return np.float32(np.maximum(
+                2 * iters * self.geom.chips
+                * multibit_tail(region).sum() / 72.0, 0.0))
+        return np.float32(2 * iters * self.geom.chips * region.sum())
+
+    def operating_point_eval(self, op: "OperatingPoint", internal_rows, *,
+                             patterns=DEFAULT_PATTERNS, iters=DEFAULT_ITERS,
+                             multibit_only: bool = False,
+                             retention: bool = True, lane: int = OP_GRID_LANE,
+                             key: int | None = None):
+        """Monte-Carlo region test at one full ``OperatingPoint`` — the
+        NumPy loop reference for ``substrate.operating_grid_arrays``.
+
+        The accept/reject draw is keyed on ``(lane, key)``; ``key`` defaults
+        to the folded ``timing.op_point_key`` of the point's quantized
+        timing/vdd/refresh coordinates (never its temperature — conditions
+        move lambdas, not draws).  Returns ``(fails, lam_total)``: did any
+        (subarray, pattern) draw trip, and the summed expected failure
+        count over both error channels.
+        """
+        if key is None:
+            tq = 0
+            for p in PARAMS:
+                tq = (tq * 0x9E3779B9
+                      + AXES[p].quantize(getattr(op.timing, p))) & 0xFFFFFFFF
+            key = op_point_key(tq, AXES["vdd"].quantize(op.vdd),
+                               AXES["refresh"].quantize(op.refresh_ms))
+        S, P = self.geom.subarrays, len(patterns)
+        u = query_uniform(np.full((S, P), self.serial, np.uint32), lane, key,
+                          int(multibit_only), np.arange(S)[:, None],
+                          np.arange(P)[None, :])
+        fails = False
+        lam_total = np.float32(0.0)
+        for sub, pi, lam in self._op_lam_iter(
+                op, internal_rows, patterns=patterns, iters=iters,
+                multibit_only=multibit_only, retention=retention):
+            lam_total = np.float32(lam_total + lam)
+            if u[sub, pi] < -np.expm1(-lam):
+                fails = True
+        return fails, lam_total
 
     def region_has_errors(self, param: str, t_op: float, internal_rows,
                           *, temp_C=85.0, refresh_ms=64.0,

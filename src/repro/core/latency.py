@@ -26,7 +26,13 @@ import numpy as np
 
 from repro.core.geometry import (DimmGeometry, RowScramble, bitline_distance,
                                  precharge_delay, vendor_scramble, wordline_distance)
-from repro.core.timing import PARAMS, STANDARD, TimingParams
+from repro.core.timing import PARAMS, STANDARD, TimingParams, VDD_STD
+
+# Retention-channel stress coefficients (global, not per-vendor: the ambient
+# physics of leakage, as opposed to the per-design margin structure below).
+# Units: equivalent refresh-interval doublings per degC / per volt.
+RET_TEMP_COEF = 0.025  # leakage doubles every ~40C (DDR3 2x refresh >85C)
+RET_VDD_COEF = 1.5     # lower rail -> less stored charge -> less margin
 
 
 @dataclass(frozen=True)
@@ -53,6 +59,16 @@ class VendorModel:
     outlier_rate: float = 3e-6   # heavy-tail weak cells (random, ECC's job)
     outlier_ns: float = 3.5      # extra required latency of a weak cell
     repair_rate: float = 0.01    # fraction of rows remapped post-manufacturing
+    # Operating-point axes beyond timing (the VAR-DRAM / retention direction).
+    # Access channel: required latency grows as the rail drops below nominal.
+    vdd_coef: float = 5.0        # ns of extra required latency per volt below VDD_STD
+    # Retention channel: per-cell margin (in refresh-interval doublings) that
+    # erodes with the same design slowness driving the tRAS (charge-restore)
+    # variation — design-induced retention structure, not random retention.
+    ret_base: float = 4.0        # margin (doublings) of a zero-slowness cell
+    ret_k: float = 0.25          # margin lost per ns of tRAS design slowness
+    ret_sigma: float = 0.25      # per-cell retention noise (doublings)
+    ret_drop: float = 1.2        # weak-cell margin drop (same mixture as outlier_ns)
     scramble: RowScramble | None = None
 
     def with_scramble(self, n_bits: int, seed: int = 0) -> "VendorModel":
@@ -135,6 +151,28 @@ def t_req_grid(geom: DimmGeometry, vm: VendorModel, param: str, *,
     return t.astype(np.float32)
 
 
+def design_slowness_grid(geom: DimmGeometry, vm: VendorModel, param: str, *,
+                         pattern: str = "0101") -> np.ndarray:
+    """``stress * var`` — the design-induced slowness part of ``t_req_grid``
+    (coefficient-weighted distances only; no base, adders, or offsets),
+    float32 with the same op order.  The retention channel erodes margin
+    along this grid (see ``retention_fail_mixture``), with ``param="tras"``:
+    charge-restore slowness.
+    """
+    R, C, M = geom.rows_per_mat, geom.cols_per_mat, geom.mats_x
+    rows = np.arange(R, dtype=np.float32)[None, :, None]
+    cols32 = np.arange(C, dtype=np.float32)[None, None, :]
+    d_bl = bitline_distance(geom, rows, np.arange(C)[None, None, :])
+    d_wl = wordline_distance(geom, cols32)
+    d_mat = precharge_delay(geom, np.arange(M, dtype=np.float32))[:, None, None]
+    stress = PATTERN_STRESS[pattern]
+    d_row = rows / (R - 1)
+    var = (np.float32(vm.k_bl[param]) * d_bl + np.float32(vm.k_wl[param]) * d_wl
+           + np.float32(vm.k_mat[param]) * d_mat
+           + np.float32(vm.k_row[param]) * d_row)
+    return (stress * var).astype(np.float32)
+
+
 def fail_probability(t_req_det, t_op, sigma, xp=np):
     """P(cell fails) = Phi((t_req_det - t_op)/sigma) (Gaussian noise fold).
 
@@ -181,6 +219,43 @@ def _erf(x, xp=np):
     y = 1.0 - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
                 - 0.284496736) * t + 0.254829592) * t * xp.exp(-x * x)
     return sign * y
+
+
+def retention_stress(temp_C: float, refresh_ms: float,
+                     vdd: float = VDD_STD) -> np.float32:
+    """Retention stress ``x`` in refresh-doubling units — HOST-side float32.
+
+    Shared verbatim by the numpy reference and the batched substrate (the
+    same host-adder trick as ``condition_adder``: precompute conditions in
+    numpy f32, never in-trace, so both paths see identical bits).
+    """
+    t_delta, r_log = condition_scalars(temp_C, refresh_ms)
+    return np.float32(r_log + np.float32(RET_TEMP_COEF) * t_delta
+                      + np.float32(RET_VDD_COEF) * np.float32(VDD_STD - vdd))
+
+
+def access_vdd_shift(vdd_coef, vdd: float) -> np.ndarray:
+    """Extra required access latency (ns) at supply ``vdd`` — host-side f32.
+
+    ``vdd_coef`` may be a scalar (VendorModel) or a per-DIMM leaf array.
+    """
+    return (np.asarray(vdd_coef, np.float32)
+            * np.float32(VDD_STD - vdd)).astype(np.float32)
+
+
+def retention_fail_mixture(slowness, ret_base, ret_k, x, sigma,
+                           outlier_rate, drop, xp=np):
+    """Per-cell retention failure probability at stress ``x``.
+
+    margin = ret_base - ret_k * slowness  (doublings of refresh headroom);
+    P(fail) = Phi((x - margin)/sigma), with the weak-cell mixture reusing
+    ``fail_mixture`` (a weak cell's margin is ``drop`` doublings lower).
+    ``slowness`` is the design-induced part of the tRAS required-latency
+    grid (stress * var, no base/adders) — retention erosion rides the same
+    charge-restore structure.  One op order, numpy or jax.numpy via ``xp``.
+    """
+    margin = ret_base - ret_k * slowness
+    return fail_mixture(-margin, -x, sigma, outlier_rate, drop, xp)
 
 
 def worst_rows_internal(geom: DimmGeometry) -> np.ndarray:

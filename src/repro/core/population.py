@@ -25,6 +25,12 @@ def _die_variant(vm: VendorModel, die: str, scale: float, nbits: int, seed: int)
         k_wl={k: v * scale for k, v in vm.k_wl.items()},
         k_mat={k: v * scale for k, v in vm.k_mat.items()},
         sigma=vm.sigma * (0.8 + 0.4 * (seed % 3) / 2),
+        # design-scaled operating-point coefficients: stronger design
+        # variation also means steeper retention erosion and voltage
+        # sensitivity (deterministic per die, like the timing scales)
+        ret_k=vm.ret_k * scale,
+        ret_base=vm.ret_base * (0.9 + 0.05 * (seed % 5)),
+        vdd_coef=vm.vdd_coef * (0.85 + 0.1 * (seed % 4)),
     )
     return scaled.with_scramble(nbits, seed)
 
@@ -106,9 +112,14 @@ def synthetic_fleet(n: int, geom: DimmGeometry = SMALL, seed: int = 0):
     coeff = lambda attr: f32([[getattr(t, attr)[p] for p in PARAMS]
                               for t in tmpl])
     tab = {a: coeff(a) for a in ("base", "k_bl", "k_wl", "k_mat", "k_row")}
+    # new operating-point leaves ride the template tables (indexed by
+    # serial % len(tmpl)), NOT fresh hash lanes: existing chip/subarray
+    # normals keep their lanes, so pre-operating-point fleets are unchanged
     scal = {a: f32([getattr(t, a) for t in tmpl])
             for a in ("sigma", "chip_sigma", "temp_coef", "refresh_coef",
-                      "aging_coef", "outlier_rate", "outlier_ns")}
+                      "aging_coef", "outlier_rate", "outlier_ns",
+                      "vdd_coef", "ret_base", "ret_k", "ret_sigma",
+                      "ret_drop")}
     i2e = np.stack([np.asarray(t.scramble.int_to_ext(rows))
                     for t in tmpl]).astype(np.int32)
     e2i = np.stack([np.asarray(t.scramble.ext_to_int(rows))
@@ -148,6 +159,9 @@ def synthetic_fleet(n: int, geom: DimmGeometry = SMALL, seed: int = 0):
             row_src=np.broadcast_to(
                 rows.astype(np.int32), (C, geom.subarrays, R)).copy(),
             int_to_ext=i2e[ti], ext_to_int=e2i[ti],
+            vdd_coef=scal["vdd_coef"][ti], ret_base=scal["ret_base"][ti],
+            ret_k=scal["ret_k"][ti], ret_sigma=scal["ret_sigma"][ti],
+            ret_drop=scal["ret_drop"][ti],
         )
 
     return PopulationStream(n_dimms=int(n), geom=geom, chunk_fn=chunk_fn)

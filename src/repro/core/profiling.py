@@ -32,8 +32,11 @@ import numpy as np
 from repro.core.errors import DEFAULT_ITERS, DEFAULT_PATTERNS, DimmModel
 from repro.core.latency import worst_rows_internal
 from repro.core.substrate import (DimmBatch, _resolve_rows,
-                                  lifetime_population, profile_population)
-from repro.core.timing import CYCLE_NS, PARAMS, STANDARD, TimingParams, timing_grid
+                                  lifetime_population,
+                                  operating_points_population,
+                                  profile_population)
+from repro.core.timing import (AXES, CYCLE_NS, PARAMS, STANDARD, VDD_STD,
+                               OperatingPoint, TimingParams, timing_grid)
 
 
 # ------------------------------------------------------------- cost model
@@ -62,6 +65,20 @@ def diva_profile(dimm: DimmModel, *, temp_C=55.0, refresh_ms=64.0,
                               region="worst", temp_C=temp_C,
                               refresh_ms=refresh_ms, guard_cycles=guard_cycles,
                               multibit_only=with_ecc)[0]
+
+
+def diva_operating_point(dimm: DimmModel, *, temp_C=55.0, refresh_ms=64.0,
+                         vdd=VDD_STD, guard_cycles: int = 1,
+                         with_ecc: bool = True, **kw) -> OperatingPoint:
+    """N-axis DIVA profiling of one DIMM: the timing table plus the safe
+    voltage/refresh operating values (each non-timing axis swept one knob at
+    a time at standard timing, with the retention error channel live) as one
+    ``OperatingPoint`` — the per-DIMM face of
+    ``substrate.operating_points_population``."""
+    return operating_points_population(
+        DimmBatch.from_population([dimm]), temp_C=temp_C,
+        refresh_ms=refresh_ms, vdd=vdd, guard_cycles=guard_cycles,
+        multibit_only=with_ecc, **kw)[0]
 
 
 def conventional_profile(dimm: DimmModel, *, temp_C=55.0, refresh_ms=64.0,
@@ -190,13 +207,23 @@ class DivaProfiler:
     ``substrate.profile_population_arrays``): ``bank_table()`` serves the
     current epoch's (banks, 4) ns table — what ``memsim``'s FR-FCFS
     simulator charges per request — while ``timing()`` keeps returning the
-    whole-DIMM-safe envelope (per-parameter max over banks)."""
+    whole-DIMM-safe envelope (per-parameter max over banks).
+
+    ``axes`` extends each epoch's sweep past the 4-timing prefix ("vdd",
+    "refresh" — see ``timing.AXES``), with ``vdd`` the ambient supply and
+    ``retention`` the second error channel; ``axis_table()`` serves the full
+    (banks, len(axes)) row and ``operating_point()`` its whole-DIMM-safe
+    envelope as an ``OperatingPoint`` (per-axis direction: max over banks on
+    descending axes — timing, vdd — min on ascending — refresh)."""
     dimm: DimmModel
     period_steps: int = 1000
     temp_C: float = 55.0
     refresh_ms: float = 64.0
+    vdd: float = VDD_STD
     years_per_period: float = 0.0
     banks: int = 1
+    axes: tuple = PARAMS
+    retention: bool = False
     discovery: object | None = None
     _timings: np.ndarray | None = field(default=None, repr=False)
     _age_base: float | None = field(default=None, repr=False)
@@ -228,8 +255,9 @@ class DivaProfiler:
         return lifetime_population(
             DimmBatch.from_population([self.dimm]), ages,
             np.full(n_epochs, self.temp_C), refresh_ms=self.refresh_ms,
-            region=self._region(), multibit=True, diagnostics=diagnostics,
-            banks=self.banks)
+            vdd=self.vdd, region=self._region(), multibit=True,
+            diagnostics=diagnostics, banks=self.banks,
+            axes=tuple(self.axes), retention=self.retention)
 
     def timing(self) -> TimingParams:
         epoch = self._step // self.period_steps
@@ -253,52 +281,85 @@ class DivaProfiler:
         row = self._timings[rel]
         if row.ndim == 2:           # per-bank mode: whole-DIMM-safe envelope
             row = row.max(axis=0)
-        return TimingParams(*(float(v) for v in row))
+        return TimingParams(*(float(v) for v in row[:len(PARAMS)]))
+
+    def _current_row(self) -> np.ndarray:
+        if self._timings is None:
+            raise RuntimeError("call timing() at least once first")
+        return np.atleast_2d(self._timings[self._cur_epoch - self._epoch_base])
 
     def bank_table(self) -> np.ndarray:
         """(banks, 4) ns table of the epoch most recently served by
         ``timing()`` — the per-bank operating point the memsim FR-FCFS
         simulator charges per request (``banks=1`` returns the whole-DIMM
-        row as (1, 4))."""
-        if self._timings is None:
-            raise RuntimeError("call timing() at least once first")
-        return np.atleast_2d(self._timings[self._cur_epoch - self._epoch_base])
+        row as (1, 4)).  Always the 4-timing prefix, whatever ``axes``."""
+        return self._current_row()[:, :len(PARAMS)]
+
+    def axis_table(self) -> np.ndarray:
+        """(banks, len(axes)) per-axis table of the epoch most recently
+        served by ``timing()`` — columns in ``self.axes`` order."""
+        return self._current_row()
+
+    def operating_point(self) -> OperatingPoint:
+        """Whole-DIMM-safe ``OperatingPoint`` of the epoch most recently
+        served by ``timing()``: per-axis envelope over banks (max on
+        descending axes, min on the ascending refresh axis), with the
+        profiler's ambient temperature."""
+        row = self._current_row()
+        axes = tuple(self.axes)
+        env = {a: float(row[:, i].max() if AXES[a].descending
+                        else row[:, i].min())
+               for i, a in enumerate(axes)}
+        return OperatingPoint(
+            timing=TimingParams(*(env[p] for p in PARAMS)),
+            vdd=env.get("vdd", self.vdd), temp_C=self.temp_C,
+            refresh_ms=env.get("refresh", self.refresh_ms))
 
 
 @dataclass
 class ALDRAM:
     """Static baseline: timing table fixed at install time (age=0); applies a
     temperature bin but cannot see aging (Sec 6.1 / Sec 7)."""
-    table: dict  # temp bin -> (banks, 4) ns array in PARAMS order
+    table: dict  # temp bin -> (banks, len(axes)) ns array, axes-order columns
+    axes: tuple = PARAMS
 
     @classmethod
-    def install(cls, dimm: DimmModel, temps=(55.0, 85.0),
-                banks: int = 1) -> "ALDRAM":
+    def install(cls, dimm: DimmModel, temps=(55.0, 85.0), banks: int = 1,
+                axes=PARAMS, vdd: float = VDD_STD,
+                retention: bool = False) -> "ALDRAM":
         # AL-DRAM has no test region concept: we give it the *oracle*
         # min-safe over all rows at install time (the paper's generous
         # assumption for the baseline) but WITHOUT guardband re-profiling.
         # Install is one jitted lifetime scan whose "epochs" are the
         # temperature bins of a zero-aging schedule (ages override the
         # DIMM's age leaf), reproducing conventional_profile per bin.
-        # ``banks > 1`` installs per-bank static tables (subarray groups).
+        # ``banks > 1`` installs per-bank static tables (subarray groups);
+        # ``axes`` extends each bin past the timing prefix (static per-bin
+        # vdd/refresh points, frozen at install like everything AL-DRAM does).
         out = lifetime_population(
             DimmBatch.from_population([dimm]),
             np.zeros(len(temps), np.float32), np.asarray(temps, np.float64),
-            region="all", multibit=False, diagnostics=False, banks=banks)
+            vdd=vdd, region="all", multibit=False, diagnostics=False,
+            banks=banks, axes=tuple(axes), retention=retention)
         return cls({t: np.atleast_2d(np.asarray(out["timings"][i, 0]))
-                    for i, t in enumerate(temps)})
+                    for i, t in enumerate(temps)}, axes=tuple(axes))
 
     def _bin(self, temp_C: float):
         return min(self.table, key=lambda t: abs(t - temp_C))
 
     def bank_table(self, temp_C: float) -> np.ndarray:
         """(banks, 4) ns table of the nearest installed temperature bin —
-        the per-bank operating point for the memsim FR-FCFS simulator."""
+        the per-bank operating point for the memsim FR-FCFS simulator.
+        Always the 4-timing prefix, whatever ``axes``."""
+        return self.table[self._bin(temp_C)][:, :len(PARAMS)]
+
+    def axis_table(self, temp_C: float) -> np.ndarray:
+        """(banks, len(axes)) per-axis table of the nearest installed bin."""
         return self.table[self._bin(temp_C)]
 
     def timing(self, temp_C: float) -> TimingParams:
         row = self.table[self._bin(temp_C)].max(axis=0)  # whole-DIMM envelope
-        return TimingParams(*(float(v) for v in row))
+        return TimingParams(*(float(v) for v in row[:len(PARAMS)]))
 
 
 # ------------------------------------------------------------- reporting

@@ -19,7 +19,16 @@ module).
 """
 from __future__ import annotations
 
+import warnings
+
 from repro.core.timing import STANDARD, TimingParams
+
+# a facade-level warning only: importing this module must stay free of any
+# memsim work (no trace synthesis, no jit — the N_TRACE_BUILDS contract)
+warnings.warn(
+    "repro.core.ramlite is a compatibility facade; use repro.memsim "
+    "(FR-FCFS scheduler, per-bank DIVA tables) for new code",
+    DeprecationWarning, stacklevel=2)
 
 
 def system_speedup_population(timings, t_base: TimingParams = STANDARD,

@@ -46,16 +46,18 @@ import numpy as np
 
 from repro.core.geometry import DimmGeometry
 from repro.core.latency import (DEFAULT_ITERS, DEFAULT_PATTERNS,
-                                PATTERN_STRESS)
+                                PATTERN_STRESS, access_vdd_shift,
+                                retention_stress)
 from repro.core.packing import narrow_counts, pack_bool
-from repro.core.substrate import (DimmBatch, _LEAVES, _chunk_jitted,
-                                  _geom_consts, _lifetime_impl, _mesh_key,
-                                  _pack_coeffs, _pad0, _profile_impl,
+from repro.core.substrate import (DimmBatch, _LEAVES, _axis_context,
+                                  _chunk_jitted, _geom_consts, _lifetime_impl,
+                                  _mesh_key, _op_grid_impl, _pack_coeffs,
+                                  _pack_op_coeffs, _pad0, _profile_impl,
                                   _resolve_rows, _row_lambda_impl,
                                   _run_sharded, _shuffling_impl,
                                   condition_adders, lifetime_adders,
-                                  pattern_stress)
-from repro.core.timing import PARAMS
+                                  operating_grid_tables, pattern_stress)
+from repro.core.timing import PARAMS, VDD_STD
 from repro.sharding import chunk_spans
 
 # chunk outputs rarely share a (shape, dtype) with the donated chunk leaves;
@@ -325,10 +327,12 @@ def _chunk_call(name: str, impl, args, statics: dict, donate: tuple,
 
 def stream_profile_population(source, *, chunk_size: int = 1024,
                               region: str = "worst", temp_C: float = 55.0,
-                              refresh_ms: float = 64.0, guard_cycles: int = 1,
+                              refresh_ms: float = 64.0,
+                              vdd: float = VDD_STD, guard_cycles: int = 1,
                               multibit_only: bool = False,
                               patterns=DEFAULT_PATTERNS,
                               iters: int = DEFAULT_ITERS, banks: int = 1,
+                              axes=PARAMS, retention: bool = False,
                               collect: bool = False, mesh=None) -> dict:
     """DIVA / conventional profiling of an arbitrarily large population in
     fixed memory: the streamed ``profile_population_arrays``.
@@ -338,13 +342,21 @@ def stream_profile_population(source, *, chunk_size: int = 1024,
     ``tables_min`` / ``tables_max`` (elementwise over the population, with
     the attaining serial: the fleet's fastest/slowest corner per parameter)
     and ``tables_stats`` (Welford mean/var).  ``collect=True`` additionally
-    concatenates the per-DIMM (D, [banks,] 4) tables (small fleets / parity
-    tests).  ``mesh`` shards each chunk over the DIMM axis.
+    concatenates the per-DIMM (D, [banks,] len(axes)) tables (small fleets /
+    parity tests).  ``mesh`` shards each chunk over the DIMM axis.
+
+    ``axes`` / ``vdd`` / ``retention`` extend the sweep beyond the 4-timing
+    prefix exactly as in ``profile_population_arrays``; the per-axis context
+    tables are rebuilt host-side per chunk (they are pure per-DIMM functions
+    of the chunk's leaves, so the cross-product grid is never resident at
+    fleet scale) and fold through the same online reductions.  At the
+    defaults the chunk program is the pre-operating-point one, bit for bit.
     """
     stream = as_stream(source)
     if stream.geom.subarrays % banks != 0:
         raise ValueError(f"banks={banks} must divide "
                          f"subarrays={stream.geom.subarrays}")
+    axes = tuple(axes)
     rows = _resolve_rows(region, stream.geom)
     if rows.ndim != 1:
         raise ValueError("stream_profile_population takes a shared (Rr,) "
@@ -352,7 +364,8 @@ def stream_profile_population(source, *, chunk_size: int = 1024,
     rows_j = jnp.asarray(rows, jnp.int32)
     stress = jnp.asarray(pattern_stress(patterns))
     statics = dict(guard_cycles=guard_cycles, iters=iters,
-                   multibit=multibit_only, banks=banks)
+                   multibit=multibit_only, banks=banks, axes=axes,
+                   retention=retention)
 
     red: dict[str, Reduction] = {}
     if collect:
@@ -361,9 +374,15 @@ def stream_profile_population(source, *, chunk_size: int = 1024,
 
     def program(batch, keep, lo):
         adder = jnp.asarray(condition_adders(batch, temp_C, refresh_ms))
-        tables = _chunk_call("stream_profile", _profile_impl,
-                             (batch, rows_j, stress, adder), statics,
-                             donate=(0, 3), batch_argnums=(0, 3), mesh=mesh)
+        args = (batch, rows_j, stress, adder)
+        donate, argnums = (0, 3), (0, 3)
+        ctx_d, ctx_g = _axis_context(batch, axes, temp_C=temp_C,
+                                     refresh_ms=refresh_ms, vdd=vdd)
+        if ctx_d is not None:
+            args = args + (ctx_d, ctx_g)
+            donate, argnums = (0, 3, 4), (0, 3, 4)
+        tables = _chunk_call("stream_profile", _profile_impl, args, statics,
+                             donate=donate, batch_argnums=argnums, mesh=mesh)
         tables = np.asarray(tables if banks > 1 else tables[:, 0])
         return {name: tables for name in red}
 
@@ -507,15 +526,23 @@ def stream_shuffling_gain(probs_source, n_dimms: int | None = None, *,
 # --------------------------------------- streamed fail-grid fleet summary
 
 def _error_summary_impl(row_src, d_mat, coeffs, keep, *,
-                        cols: int, pallas: bool, threshold: float):
+                        cols: int, pallas: bool, threshold: float,
+                        voltage: bool = False, retention: bool = False):
     """One chunk of the fleet fail-grid summary, reduced ON DEVICE: the
     (C, mats, rows, cols) grid tensor exists only chunk-sized and only on
     device; what crosses to host is per-DIMM scalars, the fleet cell-sum,
     exact per-cell hot counts, and a bit-packable per-DIMM row fail map.
-    ``keep`` masks clone-padding out of the cross-DIMM aggregates."""
+    ``keep`` masks clone-padding out of the cross-DIMM aggregates.  Static
+    ``voltage``/``retention`` route through the operating-point kernel
+    (15-coefficient rows); both off is the plain ``fail_prob`` graph."""
     from repro.kernels import ops
-    grids = ops.fail_prob_batch(row_src, d_mat, coeffs, cols=cols,
-                                pallas=pallas)              # (C, M, R, cols)
+    if voltage or retention:
+        grids = ops.fail_prob_op_batch(row_src, d_mat, coeffs, cols=cols,
+                                       voltage=voltage, retention=retention,
+                                       pallas=pallas)       # (C, M, R, cols)
+    else:
+        grids = ops.fail_prob_batch(row_src, d_mat, coeffs, cols=cols,
+                                    pallas=pallas)          # (C, M, R, cols)
     keep4 = keep[:, None, None, None]
     return {
         "lam_total": grids.sum(axis=(1, 2, 3)),             # (C,) per-DIMM
@@ -558,7 +585,8 @@ def _error_summary_sharded(mesh, args, statics: dict):
 
 def stream_error_summary(source, param: str, t_op: float, *,
                          chunk_size: int = 2048, temp_C: float = 85.0,
-                         refresh_ms: float = 64.0, pattern: str = "0101",
+                         refresh_ms: float = 64.0, vdd: float = VDD_STD,
+                         retention: bool = False, pattern: str = "0101",
                          chip: int = 0, subarray: int = 0,
                          threshold: float = 0.5,
                          collect_fail_maps: bool = False, mesh=None) -> dict:
@@ -578,15 +606,25 @@ def stream_error_summary(source, param: str, t_op: float, *,
         fails with p > ``threshold`` (chunk-invariant integer fold);
       * ``fail_maps`` (opt-in) — per-DIMM (R,) row fail maps, bit-packed
         8 cells/byte (``packing.pack_bool``) before they go resident.
+
+    ``vdd`` / ``retention`` route the chunk program through the
+    operating-point kernel (``ops.fail_prob_op_batch``): a non-nominal
+    supply shifts the access channel, and ``retention=True`` adds the
+    refresh/temperature retention channel riding the swept parameter's
+    design-variation sum (canonically ``param="tras"``, the charge-restore
+    knob).  At the defaults the chunk program is the plain ``fail_prob``
+    one, verbatim.
     """
     from repro.kernels import ops
     stream = as_stream(source)
     pidx = PARAMS.index(param)
+    voltage = vdd != VDD_STD
     stress = np.float32(PATTERN_STRESS[pattern])
     _, d_mat, _ = _geom_consts(stream.geom)
     d_mat = jnp.asarray(d_mat)
     statics = dict(cols=stream.geom.cols_per_mat, pallas=ops.use_pallas(),
-                   threshold=threshold)
+                   threshold=threshold, voltage=voltage, retention=retention)
+    ret_x = retention_stress(temp_C, refresh_ms, vdd)
     packed_maps: list = []
 
     red = {"lam_stats": Welford(), "lam_min": Min(), "lam_max": Max(),
@@ -598,8 +636,14 @@ def stream_error_summary(source, param: str, t_op: float, *,
 
     def program(batch, keep, lo):
         adder = jnp.asarray(condition_adders(batch, temp_C, refresh_ms))
-        coeffs = _pack_coeffs(batch, pidx, np.float32(t_op), stress, adder,
-                              chip, subarray)
+        if voltage or retention:
+            shift = access_vdd_shift(
+                np.asarray(batch.vdd_coef, np.float32), vdd)
+            coeffs = _pack_op_coeffs(batch, pidx, np.float32(t_op), stress,
+                                     adder, chip, subarray, shift, ret_x)
+        else:
+            coeffs = _pack_coeffs(batch, pidx, np.float32(t_op), stress,
+                                  adder, chip, subarray)
         args = (jnp.asarray(batch.row_src[:, subarray]), d_mat, coeffs,
                 jnp.asarray(keep))
         if mesh is None:
@@ -619,6 +663,80 @@ def stream_error_summary(source, param: str, t_op: float, *,
                             chunk_size=chunk_size, mesh=mesh)
     if collect_fail_maps:
         out["fail_maps"] = packed_maps
+    return out
+
+
+# --------------------------------------- streamed N-axis operating grid
+
+def stream_operating_grid(source, points, *, chunk_size: int = 1024,
+                          region: str = "worst", patterns=DEFAULT_PATTERNS,
+                          iters: int = DEFAULT_ITERS,
+                          multibit_only: bool = False, banks: int = 1,
+                          retention: bool = True, collect: bool = False,
+                          mesh=None) -> dict:
+    """The streamed ``operating_grid_arrays``: every DIMM of an arbitrarily
+    large fleet evaluated at every ``OperatingPoint`` in ``points``, with
+    the (D, G) result grid NEVER fully resident — per-point outcomes fold
+    through online reductions as chunks flow through.
+
+    Per chunk, the host tables (per-DIMM condition adders and voltage
+    shifts) are rebuilt from the chunk's leaves — pure per-DIMM functions,
+    so chunking cannot change them — and the jitted grid scan runs once.
+    Folded summaries, all (G[, banks])-shaped over the grid:
+
+      * ``fail_count`` — EXACT int64 count of DIMMs whose region trips at
+        each point (chunk-invariant integer fold);
+      * ``fail_stats`` — Welford over the 0/1 outcomes: the population
+        failure probability per point (the Pareto frontier's z-axis);
+      * ``lam_stats`` / ``lam_max`` — expected-failure-mass moments and the
+        fleet's worst DIMM per point (with the attaining serial).
+
+    ``collect=True`` additionally keeps the per-DIMM (D, G[, banks])
+    ``fails`` / ``lam`` arrays (small fleets / parity tests).  Per-DIMM
+    DECISIONS are bit-identical to the dense path at any chunk size — the
+    draw key is ``timing.op_point_key`` of the point's quantized
+    coordinates plus the DIMM serial, never a batch position; per-DIMM
+    lambdas are float32 reductions whose fusion varies with the chunk
+    program's width, i.e. tolerance-stable per the module contract.
+    """
+    stream = as_stream(source)
+    if stream.geom.subarrays % banks != 0:
+        raise ValueError(f"banks={banks} must divide "
+                         f"subarrays={stream.geom.subarrays}")
+    points = list(points)
+    rows = _resolve_rows(region, stream.geom)
+    if rows.ndim != 1:
+        raise ValueError("stream_operating_grid takes a shared (Rr,) "
+                         "region; use the dense path for per-DIMM regions")
+    rows_j = jnp.asarray(rows, jnp.int32)
+    stress = jnp.asarray(pattern_stress(patterns))
+    statics = dict(iters=iters, multibit=multibit_only, banks=banks,
+                   retention=retention)
+    sq = (lambda a: a[..., 0]) if banks == 1 else (lambda a: a)
+
+    red: dict[str, Reduction] = {"fail_count": Sum(), "fail_stats": Welford(),
+                                 "lam_stats": Welford(), "lam_max": Max()}
+    names = {"fail_count": "fails", "fail_stats": "fails",
+             "lam_stats": "lam", "lam_max": "lam"}
+    if collect:
+        red.update(fails=Collect(), lam=Collect())
+        names.update(fails="fails", lam="lam")
+
+    def program(batch, keep, lo):
+        t_g, adders_dg, shifts_dg, keys_g, retx_g = \
+            operating_grid_tables(batch, points)
+        fails, lam = _chunk_call(
+            "stream_op_grid", _op_grid_impl,
+            (batch, rows_j, stress, jnp.asarray(t_g),
+             jnp.asarray(adders_dg), jnp.asarray(shifts_dg),
+             jnp.asarray(keys_g), jnp.asarray(retx_g)),
+            statics, donate=(0, 4, 5), batch_argnums=(0, 4, 5), mesh=mesh)
+        vals = {"fails": sq(np.asarray(fails)), "lam": sq(np.asarray(lam))}
+        return {name: vals[names[name]] for name in red}
+
+    out = stream_population(stream, program, red,
+                            chunk_size=chunk_size, mesh=mesh)
+    out["points"] = points
     return out
 
 

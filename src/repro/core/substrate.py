@@ -48,16 +48,23 @@ import numpy as np
 from repro.core.geometry import (DimmGeometry, precharge_delay,
                                  wordline_distance)
 from repro.core.latency import (DEFAULT_ITERS, DEFAULT_PATTERNS,
-                                PATTERN_STRESS, condition_scalars,
-                                fail_mixture, multibit_tail,
+                                PATTERN_STRESS, access_vdd_shift,
+                                condition_scalars, fail_mixture, multibit_tail,
+                                retention_fail_mixture, retention_stress,
                                 worst_rows_internal)
-from repro.core.timing import CYCLE_NS, PARAMS, STANDARD, TimingParams, timing_grid
+from repro.core.timing import (AXES, CYCLE_NS, OP_GRID_LANE, PARAMS, STANDARD,
+                               VDD_STD, OperatingPoint, TimingParams,
+                               op_point_key)
 
 if TYPE_CHECKING:  # avoid an import cycle: errors.py imports query_uniform
     from repro.core.errors import DimmModel
 
-# Fixed sweep grids (Section 4 FPGA quantization) — static per parameter.
-GRIDS = {p: tuple(timing_grid(p)) for p in PARAMS}
+# Fixed sweep grids (Section 4 FPGA quantization) — static per axis, sourced
+# from the AxisSpec registry (one definition, validated against the hash
+# quantization at construction).  Timing keys stay {param: grid} for the
+# legacy call sites; GRIDS covers every operating-point axis.
+TIMING_GRIDS = {p: AXES[p].grid for p in PARAMS}
+GRIDS = dict(TIMING_GRIDS, vdd=AXES["vdd"].grid, refresh=AXES["refresh"].grid)
 
 
 # ----------------------------------------------------------------- hashing
@@ -159,7 +166,8 @@ def mix_uniform(seed, draw, core, xp=np):
 _LEAVES = ("serial", "base", "k_bl", "k_wl", "k_mat", "k_row", "sigma",
            "temp_coef", "refresh_coef", "aging_coef", "age_years",
            "outlier_rate", "outlier_ns", "chip_offsets", "sub_offsets",
-           "row_src", "int_to_ext", "ext_to_int")
+           "row_src", "int_to_ext", "ext_to_int",
+           "vdd_coef", "ret_base", "ret_k", "ret_sigma", "ret_drop")
 
 
 @dataclass
@@ -189,6 +197,13 @@ class DimmBatch:
     row_src: Any         # (D, subarrays, R) int32
     int_to_ext: Any      # (D, R) int32
     ext_to_int: Any      # (D, R) int32
+    # operating-point axes beyond timing: access-channel voltage sensitivity
+    # and the retention-channel margin model (see latency.VendorModel)
+    vdd_coef: Any = None   # (D,) f32
+    ret_base: Any = None   # (D,) f32
+    ret_k: Any = None      # (D,) f32
+    ret_sigma: Any = None  # (D,) f32
+    ret_drop: Any = None   # (D,) f32
 
     @property
     def n_dimms(self) -> int:
@@ -229,6 +244,11 @@ class DimmBatch:
             outlier_ns=f32([d.vendor.outlier_ns for d in dimms]),
             chip_offsets=f32([d.chip_offsets for d in dimms]),
             sub_offsets=f32([d.sub_offsets for d in dimms]),
+            vdd_coef=f32([d.vendor.vdd_coef for d in dimms]),
+            ret_base=f32([d.vendor.ret_base for d in dimms]),
+            ret_k=f32([d.vendor.ret_k for d in dimms]),
+            ret_sigma=f32([d.vendor.ret_sigma for d in dimms]),
+            ret_drop=f32([d.vendor.ret_drop for d in dimms]),
             row_src=row_src,
             int_to_ext=np.stack([np.asarray(d.vendor.scramble.int_to_ext(rows))
                                  for d in dimms]).astype(np.int32),
@@ -279,7 +299,8 @@ def condition_adders(batch: DimmBatch, temp_C: float,
 # ------------------------------------------------- region failure decisions
 
 def _region_eval(batch: DimmBatch, pidx: int, t_op, rows, stress,
-                 adder, iters: int, multibit: bool, banks: int = 1):
+                 adder, iters: int, multibit: bool, banks: int = 1,
+                 extra=None):
     """Monte-Carlo region test of the whole batch at one operating point.
 
     Returns ``(fails, lam_total)``: (D, banks) bool — does the row region fail
@@ -303,6 +324,13 @@ def _region_eval(batch: DimmBatch, pidx: int, t_op, rows, stress,
     table — the blind-discovery pipeline tests each DIMM at its own recovered
     addresses.  The hash never keys on rows or banks, so two regions naming
     the same internal rows make identical draws.
+
+    ``extra`` is an optional (D,) host-precomputed required-latency addend
+    (the access-channel voltage shift of a non-nominal supply rail); its
+    default ``None`` keeps the traced program literally identical to the
+    pre-operating-point one — the same bit-parity trick as ``banks=1``.
+    The hash never keys on conditions (temp/refresh/vdd context), so context
+    changes move lambdas, never draws — the monotonicity sweeps lean on.
     """
     g = batch.geom
     R, C, S = g.rows_per_mat, g.cols_per_mat, g.subarrays
@@ -350,6 +378,8 @@ def _region_eval(batch: DimmBatch, pidx: int, t_op, rows, stress,
         t = base[:, None, None, None, None] + stress[None, :, None, None, None] \
             * var[:, None, :, :, :]                      # (D,P,M,Rr,C)
         t = t + adder[:, None, None, None, None]
+        if extra is not None:
+            t = t + extra[:, None, None, None, None]
         t = t + chip0[:, None, None, None, None]
         t = t + jnp.take(batch.sub_offsets, s, axis=1)[:, None, None, None, None]
         p = fail_mixture(t, t_cell, batch.sigma[:, None, None, None, None],
@@ -376,9 +406,111 @@ def _region_eval(batch: DimmBatch, pidx: int, t_op, rows, stress,
     return fails, lam_total
 
 
+def _op_region_eval(batch: DimmBatch, t_subs, rows, stress, adder, extra,
+                    lane: int, key_q, iters: int, multibit: bool,
+                    banks: int, retention: bool, ret_x):
+    """Monte-Carlo region test of the whole batch at one *operating point*.
+
+    Where ``_region_eval`` tests ONE timing knob against one candidate
+    value, this evaluates a full point: every timing parameter at its
+    (D, S, 4) per-subarray table value, plus (static ``retention``) the
+    retention error channel, with a single accept/reject draw per
+    (subarray, pattern).  The draw is keyed on ``(lane, key_q)`` — the
+    swept axis's hash lane and quantized value (or the folded
+    ``timing.op_point_key`` on ``OP_GRID_LANE`` for cross-product grids) —
+    and NEVER on the ambient conditions, so draws are chunking/sharding
+    invariant and single-axis sweeps stay monotone in lambda.
+
+    ``extra`` is the (D,) access-channel voltage shift (or None);
+    ``ret_x`` a traced f32 retention-stress scalar (ignored unless
+    ``retention``).  Returns ``(fails, lam)`` shaped (D, banks) exactly
+    like ``_region_eval``; lam sums the access channel over the four
+    timing parameters plus the retention channel.
+    """
+    g = batch.geom
+    R, S = g.rows_per_mat, g.subarrays
+    assert S % banks == 0, (S, banks)
+    subs_per_bank = S // banks
+    chips = g.chips
+    d_wl, d_mat, even = _geom_consts(g)
+    chip0 = batch.chip_offsets[:, 0]
+    P = stress.shape[0]
+    pat_idx = jnp.arange(P)[None, :]
+    bank_ids = jnp.arange(banks)
+    key_q = jnp.asarray(key_q, jnp.uint32)
+    D = batch.serial.shape[0]
+
+    def channel_lam(pr):
+        if multibit:
+            return jnp.maximum(
+                2 * iters * chips
+                * multibit_tail(pr, xp=jnp).sum(axis=(2, 3, 4)) / 72.0, 0.0)
+        return 2 * iters * chips * pr.sum(axis=(2, 3, 4))    # (D, P)
+
+    def per_subarray(acc, s):
+        fails_acc, lam_acc = acc
+        row_src_s = jnp.take(batch.row_src, s, axis=1)       # (D, R)
+        if rows.ndim == 2:
+            rsel = jnp.take_along_axis(row_src_s, rows, axis=1)
+        else:
+            rsel = jnp.take(row_src_s, rows, axis=1)
+        rf = rsel.astype(jnp.float32)                        # (D, Rr)
+        d_bl = jnp.where(even[None, None, :], rf[:, :, None],
+                         (R - 1) - rf[:, :, None]) / (R - 1)
+        d_row = rf / (R - 1)
+        sub_off = jnp.take(batch.sub_offsets, s, axis=1)
+        lam_sp = jnp.zeros((D, P), jnp.float32)
+        var_tras = None
+        for p in range(len(PARAMS)):
+            var = (batch.k_bl[:, p][:, None, None, None] * d_bl[:, None, :, :]
+                   + batch.k_wl[:, p][:, None, None, None]
+                   * d_wl[None, None, None, :]
+                   + batch.k_mat[:, p][:, None, None, None]
+                   * d_mat[None, :, None, None]
+                   + batch.k_row[:, p][:, None, None, None]
+                   * d_row[:, None, :, None])
+            if p == 1:
+                var_tras = var  # tRAS (charge restore) drives retention too
+            t = batch.base[:, p][:, None, None, None, None] \
+                + stress[None, :, None, None, None] * var[:, None, :, :, :]
+            t = t + adder[:, None, None, None, None]
+            if extra is not None:
+                t = t + extra[:, None, None, None, None]
+            t = t + chip0[:, None, None, None, None]
+            t = t + sub_off[:, None, None, None, None]
+            t_cell = t_subs[:, s, p][:, None, None, None, None]
+            pr = fail_mixture(t, t_cell, batch.sigma[:, None, None, None, None],
+                              batch.outlier_rate[:, None, None, None, None],
+                              batch.outlier_ns[:, None, None, None, None],
+                              xp=jnp)
+            lam_sp = lam_sp + channel_lam(pr)
+        if retention:
+            slow = stress[None, :, None, None, None] \
+                * var_tras[:, None, :, :, :]
+            pr = retention_fail_mixture(
+                slow, batch.ret_base[:, None, None, None, None],
+                batch.ret_k[:, None, None, None, None], ret_x,
+                batch.ret_sigma[:, None, None, None, None],
+                batch.outlier_rate[:, None, None, None, None],
+                batch.ret_drop[:, None, None, None, None], xp=jnp)
+            lam_sp = lam_sp + channel_lam(pr)
+        u = query_uniform(batch.serial[:, None], lane, key_q, int(multibit),
+                          s, pat_idx, xp=jnp)
+        fail_s = jnp.any(u < -jnp.expm1(-lam_sp), axis=1)    # (D,)
+        bank_oh = bank_ids == s // subs_per_bank
+        fails_acc = fails_acc | (fail_s[:, None] & bank_oh[None, :])
+        lam_acc = lam_acc + lam_sp.sum(axis=1)[:, None] \
+            * bank_oh.astype(jnp.float32)[None, :]
+        return (fails_acc, lam_acc), None
+
+    init = (jnp.zeros((D, banks), bool), jnp.zeros((D, banks), jnp.float32))
+    (fails, lam_total), _ = jax.lax.scan(per_subarray, init, jnp.arange(S))
+    return fails, lam_total
+
+
 def _sweep_param(batch: DimmBatch, pidx: int, floor, rows, stress, adder,
                  guard_cycles: int, iters: int, multibit: bool,
-                 banks: int = 1):
+                 banks: int = 1, extra=None):
     """lax.scan down one parameter's timing grid; per-(DIMM, bank) min-safe
     value (``floor`` is (D, banks)).
 
@@ -390,7 +522,7 @@ def _sweep_param(batch: DimmBatch, pidx: int, floor, rows, stress, adder,
 
     def step(_, t_op):
         fail, _ = _region_eval(batch, pidx, t_op, rows, stress, adder,
-                               iters, multibit, banks)
+                               iters, multibit, banks, extra)
         return None, fail | (t_op < floor - 1e-9)
 
     _, stops = jax.lax.scan(step, None, grid)            # (G, D, banks)
@@ -400,29 +532,102 @@ def _sweep_param(batch: DimmBatch, pidx: int, floor, rows, stress, adder,
     return jnp.minimum(best + guard_cycles * CYCLE_NS, std)
 
 
-def _profile_impl(batch: DimmBatch, rows, stress, adder, *,
-                  guard_cycles: int, iters: int, multibit: bool,
-                  banks: int = 1):
+def _sweep_axis(batch: DimmBatch, axis: str, t_subs, rows, stress,
+                extras_gd, adders_gd, keys_g, retx_g, guard_cycles: int,
+                iters: int, multibit: bool, banks: int, retention: bool):
+    """lax.scan along one NON-timing axis's grid (vdd / refresh): the
+    per-(DIMM, bank) most aggressive safe value, everything else standard.
+
+    Mirrors the paper's one-knob-at-a-time methodology: the axis is swept
+    with the timing table at STANDARD values (``t_subs``), which also makes
+    the bank-envelope property structural — a bank's stop points are a
+    subset of the whole DIMM's, so per-bank values are never less
+    aggressive than the whole-DIMM value.  The guardband retreats
+    ``guard_cycles`` grid steps toward standard (the grid-step analogue of
+    the timing sweep's ``guard_cycles * CYCLE_NS``); fewer safe points than
+    the retreat means the standard value.
+    """
+    spec = AXES[axis]
+    grid = jnp.asarray(spec.grid, jnp.float32)
+    lane = spec.index
+
+    def step(_, xs):
+        extra_g, adder_g, key_g, retx = xs
+        fail, _ = _op_region_eval(batch, t_subs, rows, stress, adder_g,
+                                  extra_g, lane, key_g, iters, multibit,
+                                  banks, retention, retx)
+        return None, fail
+
+    _, stops = jax.lax.scan(step, None,
+                            (extras_gd, adders_gd, keys_g, retx_g))
+    n_ok = jnp.sum(jnp.cumsum(stops.astype(jnp.int32), axis=0) == 0, axis=0)
+    idx = n_ok - 1 - guard_cycles                        # (D, banks)
+    vals = grid[jnp.clip(idx, 0, grid.shape[0] - 1)]
+    return jnp.where(idx >= 0, vals, jnp.float32(spec.standard))
+
+
+def _profile_impl(batch: DimmBatch, rows, stress, adder, ctx_d=None,
+                  ctx_g=None, *, guard_cycles: int, iters: int,
+                  multibit: bool, banks: int = 1, axes=PARAMS,
+                  retention: bool = False):
     """The whole-population sweep: tRCD first, tRAS floored by tRCD + 10 ns
-    (the Section 4 infrastructure constraint), then tRP and tWR.  Returns
-    (D, banks, 4): per-bank timing tables when ``banks > 1`` (each bank's
-    sweep sees only its own subarrays' failures, so a bank can settle below
-    the whole-DIMM value — the FLY-DRAM margin), the whole-DIMM sweep at
-    ``banks=1`` (bit-identical to the pre-bank-axis program)."""
+    (the Section 4 infrastructure constraint), then tRP and tWR — then any
+    further operating-point axes (``axes`` beyond the mandatory 4-timing
+    prefix: "vdd", "refresh"), each swept one-knob-at-a-time at standard
+    timing via ``_sweep_axis``.  Returns (D, banks, len(axes)): per-bank
+    tables when ``banks > 1`` (each bank's sweep sees only its own
+    subarrays' failures, so a bank can settle below the whole-DIMM value —
+    the FLY-DRAM margin), the whole-DIMM sweep at ``banks=1``.
+
+    ``ctx_d``/``ctx_g`` carry the HOST-precomputed per-axis tables
+    (``_axis_context``): ctx_d's leaves are DIMM-leading (sharded with the
+    batch), ctx_g's are per-grid-point (replicated).  With the default
+    ``axes=PARAMS``, no context and no retention, the traced program is
+    bit-identical to the pre-operating-point 4-parameter sweep — the
+    ``banks=1`` trick applied to the whole axis system.
+    """
+    assert tuple(axes[:len(PARAMS)]) == PARAMS, \
+        f"axes must keep the 4 timing params as a prefix, got {axes!r}"
     D = batch.serial.shape[0]
+    S = batch.geom.subarrays
+    extra = None if not ctx_d else ctx_d.get("vdd_extra")
     kw = dict(rows=rows, stress=stress, adder=adder, banks=banks,
-              guard_cycles=guard_cycles, iters=iters, multibit=multibit)
+              guard_cycles=guard_cycles, iters=iters, multibit=multibit,
+              extra=extra)
     floor5 = jnp.full((D, banks), 5.0, jnp.float32)
-    trcd = _sweep_param(batch, 0, floor5, **kw)
-    tras = _sweep_param(batch, 1, trcd + 10.0, **kw)
-    trp = _sweep_param(batch, 2, floor5, **kw)
-    twr = _sweep_param(batch, 3, floor5, **kw)
-    return jnp.stack([trcd, tras, trp, twr], axis=2)
+    res = {}
+    res["trcd"] = trcd = _sweep_param(batch, 0, floor5, **kw)
+    res["tras"] = _sweep_param(batch, 1, trcd + 10.0, **kw)
+    res["trp"] = _sweep_param(batch, 2, floor5, **kw)
+    res["twr"] = _sweep_param(batch, 3, floor5, **kw)
+    extra_axes = tuple(axes[len(PARAMS):])
+    if extra_axes:
+        std_t = jnp.asarray([getattr(STANDARD, p) for p in PARAMS],
+                            jnp.float32)
+        t_subs = jnp.broadcast_to(std_t[None, None, :], (D, S, len(PARAMS)))
+        for ax in extra_axes:
+            if ax == "vdd":
+                extras_gd = ctx_d["vdd_shift"].T               # (G, D)
+                adders_gd = jnp.broadcast_to(
+                    adder[None, :], (extras_gd.shape[0], D))
+            elif ax == "refresh":
+                adders_gd = adder[None, :] + ctx_d["refresh_delta"].T
+                base_extra = extra if extra is not None \
+                    else jnp.zeros((D,), jnp.float32)
+                extras_gd = jnp.broadcast_to(
+                    base_extra[None, :], (adders_gd.shape[0], D))
+            else:
+                raise ValueError(f"unknown operating-point axis {ax!r}")
+            res[ax] = _sweep_axis(
+                batch, ax, t_subs, rows, stress, extras_gd, adders_gd,
+                ctx_g[f"{ax}_keys"], ctx_g[f"{ax}_retx"], guard_cycles,
+                iters, multibit, banks, retention)
+    return jnp.stack([res[a] for a in axes], axis=2)
 
 
 _profile_jit = functools.partial(
     jax.jit, static_argnames=("guard_cycles", "iters", "multibit",
-                              "banks"))(_profile_impl)
+                              "banks", "axes", "retention"))(_profile_impl)
 
 
 # ------------------------------------------------- DIMM-axis sharded dispatch
@@ -537,14 +742,61 @@ def _resolve_rows(region, geom: DimmGeometry, n_dimms: int | None = None
     return rows
 
 
+def _axis_context(batch: DimmBatch, axes, *, temp_C: float, refresh_ms: float,
+                  vdd: float, np_out: bool = False):
+    """HOST-precomputed per-axis tables for the generalized sweep — the
+    ``lifetime_adders`` trick extended to the new axes: every
+    operating-point-dependent float is computed in numpy f32 with the op
+    order of the latency-module helpers, then fed into the jitted scan as
+    data, never recomputed in-trace (parity with the numpy references by
+    construction, immune to XLA fusion).
+
+    Returns ``(ctx_d, ctx_g)``: DIMM-leading leaves (sharded with the
+    batch; (D,) / (D, G) f32) and per-grid-point leaves (replicated; (G,)
+    hash keys and retention stresses).  Both are ``None`` at the default
+    operating point with no extra axes — the 4-arg bit-parity path.
+    """
+    ctx_d, ctx_g = {}, {}
+    vc = np.asarray(batch.vdd_coef, np.float32)
+    if vdd != VDD_STD:
+        ctx_d["vdd_extra"] = access_vdd_shift(vc, vdd)
+    if "vdd" in axes:
+        spec = AXES["vdd"]
+        ctx_d["vdd_shift"] = np.stack(
+            [access_vdd_shift(vc, v) for v in spec.grid], axis=1)
+        ctx_g["vdd_keys"] = np.asarray([spec.quantize(v) for v in spec.grid],
+                                       np.uint32)
+        ctx_g["vdd_retx"] = np.asarray(
+            [retention_stress(temp_C, refresh_ms, v) for v in spec.grid],
+            np.float32)
+    if "refresh" in axes:
+        spec = AXES["refresh"]
+        base = condition_adders(batch, temp_C, refresh_ms)
+        ctx_d["refresh_delta"] = np.stack(
+            [condition_adders(batch, temp_C, r) - base for r in spec.grid],
+            axis=1).astype(np.float32)
+        ctx_g["refresh_keys"] = np.asarray(
+            [spec.quantize(r) for r in spec.grid], np.uint32)
+        ctx_g["refresh_retx"] = np.asarray(
+            [retention_stress(temp_C, r, vdd) for r in spec.grid], np.float32)
+    if not ctx_d and not ctx_g:
+        return None, None
+    if not np_out:
+        ctx_d = {k: jnp.asarray(v) for k, v in ctx_d.items()}
+        ctx_g = {k: jnp.asarray(v) for k, v in ctx_g.items()}
+    return ctx_d, ctx_g
+
+
 def profile_population_arrays(batch: DimmBatch, *, region: str = "worst",
                               temp_C: float = 55.0, refresh_ms: float = 64.0,
-                              guard_cycles: int = 1,
+                              vdd: float = VDD_STD, guard_cycles: int = 1,
                               multibit_only: bool = False,
                               patterns=DEFAULT_PATTERNS,
                               iters: int = DEFAULT_ITERS,
-                              banks: int = 1, mesh=None) -> np.ndarray:
-    """(D, 4) profiled timings in PARAMS order; one jitted call for all DIMMs.
+                              banks: int = 1, axes=PARAMS,
+                              retention: bool = False, mesh=None) -> np.ndarray:
+    """(D, len(axes)) profiled operating values, one jitted call for all
+    DIMMs; the first four columns are the timing table in PARAMS order.
 
     ``region="worst"`` is DIVA Profiling (the design-induced slowest rows);
     ``region="all"`` is conventional every-row profiling; a (D, Rr) array
@@ -557,18 +809,34 @@ def profile_population_arrays(batch: DimmBatch, *, region: str = "worst",
     bit-identical to the pre-bank-axis results.  ``mesh`` shards the DIMM
     axis over a 1-D device mesh (``sharding.dimm_mesh``) — bit-identical to
     the single-device path.
+
+    ``axes`` extends the sweep beyond the mandatory 4-timing prefix with
+    operating-point axes ("vdd", "refresh" — see ``timing.AXES``), each
+    swept one-knob-at-a-time at standard timing (the paper's methodology
+    generalized); ``vdd`` sets the *ambient* supply context for the timing
+    sweeps, and ``retention`` adds the refresh/temperature-driven retention
+    error channel to the non-timing axis evaluations.  The default
+    (``axes=PARAMS``, nominal vdd, no retention) traces the pre-refactor
+    program bit for bit.
     """
     if batch.geom.subarrays % banks != 0:
         raise ValueError(f"banks={banks} must divide "
                          f"subarrays={batch.geom.subarrays}")
+    axes = tuple(axes)
     rows = _resolve_rows(region, batch.geom, batch.n_dimms)
     adder = condition_adders(batch, temp_C, refresh_ms)
+    ctx_d, ctx_g = _axis_context(batch, axes, temp_C=temp_C,
+                                 refresh_ms=refresh_ms, vdd=vdd)
     args = (batch, jnp.asarray(rows, jnp.int32),
             jnp.asarray(pattern_stress(patterns)), jnp.asarray(adder))
-    statics = dict(guard_cycles=guard_cycles, iters=iters,
-                   multibit=multibit_only, banks=banks)
     # a per-DIMM region is batch-shaped: shard it with the DIMM axis
     argnums = (0, 1, 3) if rows.ndim == 2 else (0, 3)
+    if ctx_d is not None:
+        args = args + (ctx_d, ctx_g)
+        argnums = argnums + (4,)
+    statics = dict(guard_cycles=guard_cycles, iters=iters,
+                   multibit=multibit_only, banks=banks, axes=axes,
+                   retention=retention)
     out = _dispatch("profile", mesh, _profile_impl, _profile_jit, args,
                     statics, batch_argnums=argnums)
     out = np.asarray(out)
@@ -576,9 +844,36 @@ def profile_population_arrays(batch: DimmBatch, *, region: str = "worst",
 
 
 def profile_population(batch: DimmBatch, **kw) -> list[TimingParams]:
-    """Per-DIMM ``TimingParams`` for the whole population (see arrays variant)."""
+    """Per-DIMM ``TimingParams`` for the whole population (see arrays variant).
+
+    With extended ``axes`` only the 4-timing prefix lands in TimingParams;
+    use the arrays variant (or ``operating_points_population``) for the
+    full rows.
+    """
     arr = profile_population_arrays(batch, **kw)
-    return [TimingParams(*(float(v) for v in row)) for row in arr]
+    return [TimingParams(*(float(v) for v in row[:len(PARAMS)]))
+            for row in arr]
+
+
+def operating_points_population(batch: DimmBatch, *, temp_C: float = 55.0,
+                                vdd: float = VDD_STD, **kw
+                                ) -> list[OperatingPoint]:
+    """Per-DIMM ``OperatingPoint`` over the full extended axis list: the
+    timing table plus the per-DIMM min-safe vdd and max-safe refresh
+    interval (each profiled one-knob-at-a-time; see arrays variant)."""
+    from repro.core.timing import EXTENDED_AXES
+    kw.setdefault("axes", EXTENDED_AXES)
+    kw.setdefault("retention", True)
+    arr = profile_population_arrays(batch, temp_C=temp_C, vdd=vdd, **kw)
+    axes = tuple(kw["axes"])
+    out = []
+    for row in arr:
+        d = dict(zip(axes, (float(v) for v in row)))
+        out.append(OperatingPoint(
+            timing=TimingParams(*(d[p] for p in PARAMS)),
+            vdd=d.get("vdd", vdd), temp_C=temp_C,
+            refresh_ms=d.get("refresh", 64.0)))
+    return out
 
 
 # --------------------------------------------- lifetime sweeps (Sec 6.1 fn 2)
@@ -612,9 +907,10 @@ def lifetime_adders(batch: DimmBatch, ages, temps,
     return tc * t_delta + rc * r_log + ac * ages
 
 
-def _lifetime_impl(batch: DimmBatch, rows, stress, adders_dl, *,
-                   guard_cycles: int, iters: int, multibit: bool,
-                   diagnostics: bool, banks: int = 1):
+def _lifetime_impl(batch: DimmBatch, rows, stress, adders_dl, ctx_d=None,
+                   ctx_g=None, *, guard_cycles: int, iters: int,
+                   multibit: bool, diagnostics: bool, banks: int = 1,
+                   axes=PARAMS, retention: bool = False):
     """One ``lax.scan`` over profiling epochs.  ``adders_dl`` is (D, E) —
     DIMM-leading so the sharded runner can split dim 0 like every other arg;
     the scan walks the epoch axis.
@@ -634,18 +930,24 @@ def _lifetime_impl(batch: DimmBatch, rows, stress, adders_dl, *,
     lifecycle: each epoch profiles (D, banks, 4) tables and the stale test
     evaluates every bank's subarrays at that bank's own previous value.
 
-    Returns DIMM-leading trajectories: (D, E, banks, 4), (D, E, banks) bool,
-    (D, E, banks) f32 — or only the timings when ``diagnostics`` is off.
+    Returns DIMM-leading trajectories: (D, E, banks, len(axes)), (D, E,
+    banks) bool, (D, E, banks) f32 — or only the timings when
+    ``diagnostics`` is off.  With extended ``axes`` every epoch re-sweeps
+    the non-timing axes too (the per-axis context tables are
+    epoch-constant); the stale/ECC diagnostics keep evaluating the 4-timing
+    prefix — the staleness the Sec 6.1 argument is about.
     """
     D = batch.serial.shape[0]
     S = batch.geom.subarrays
     sub_bank = jnp.asarray(np.arange(S) // (S // banks), jnp.int32)
-    std = jnp.asarray([getattr(STANDARD, p) for p in PARAMS], jnp.float32)
+    std = jnp.asarray([AXES[a].standard for a in axes], jnp.float32)
+    extra = None if not ctx_d else ctx_d.get("vdd_extra")
     kw = dict(rows=rows, stress=stress, guard_cycles=guard_cycles,
-              iters=iters, multibit=multibit, banks=banks)
+              iters=iters, multibit=multibit, banks=banks,
+              ctx_d=ctx_d, ctx_g=ctx_g, axes=axes, retention=retention)
 
     def epoch(prev_t, adder):
-        t_new = _profile_impl(batch, adder=adder, **kw)      # (D, banks, 4)
+        t_new = _profile_impl(batch, adder=adder, **kw)  # (D, banks, n_axes)
         if not diagnostics:
             return t_new, (t_new,)
         stale = jnp.zeros((D, banks), bool)
@@ -657,29 +959,32 @@ def _lifetime_impl(batch: DimmBatch, rows, stress, adders_dl, *,
             # so every draw and decision is unchanged)
             prev_s = jnp.take(prev_t[:, :, p], sub_bank, axis=1)
             fail_p, _ = _region_eval(batch, p, prev_s, rows, stress,
-                                     adder, iters, multibit, banks)
+                                     adder, iters, multibit, banks, extra)
             stale = stale | fail_p
             new_s = jnp.take(t_new[:, :, p], sub_bank, axis=1)
             _, lam_p = _region_eval(batch, p, new_s, rows, stress,
-                                    adder, iters, True, banks)
+                                    adder, iters, True, banks, extra)
             ecc = ecc + lam_p
         return t_new, (t_new, stale, ecc)
 
-    init = jnp.broadcast_to(std, (D, banks, len(PARAMS)))
+    init = jnp.broadcast_to(std, (D, banks, len(axes)))
     _, ys = jax.lax.scan(epoch, init, adders_dl.T)
     return tuple(jnp.moveaxis(y, 0, 1) for y in ys)
 
 
 _lifetime_jit = functools.partial(
     jax.jit, static_argnames=("guard_cycles", "iters", "multibit",
-                              "diagnostics", "banks"))(_lifetime_impl)
+                              "diagnostics", "banks", "axes",
+                              "retention"))(_lifetime_impl)
 
 
 def lifetime_population(batch: DimmBatch, ages, temps, *,
-                        refresh_ms: float = 64.0, region: str = "worst",
+                        refresh_ms: float = 64.0, vdd: float = VDD_STD,
+                        region: str = "worst",
                         guard_cycles: int = 1, multibit: bool = True,
                         patterns=DEFAULT_PATTERNS, iters: int = DEFAULT_ITERS,
                         diagnostics: bool = True, banks: int = 1,
+                        axes=PARAMS, retention: bool = False,
                         mesh=None) -> dict:
     """The whole online re-profiling lifecycle as ONE device program.
 
@@ -700,18 +1005,31 @@ def lifetime_population(batch: DimmBatch, ages, temps, *,
     bank's stale test run at that bank's own previous value.
     ``diagnostics=False`` skips the stale/ECC evaluations (and their keys) —
     the cheap timing-only mode the ALDRAM / DivaProfiler wrappers use.
-    ``mesh`` shards the DIMM axis.
+    ``mesh`` shards the DIMM axis.  ``axes``/``vdd``/``retention`` extend
+    each epoch's sweep to the full operating-point space (see
+    ``profile_population_arrays``); ``timings`` then carries len(axes)
+    columns per epoch.
     """
     if batch.geom.subarrays % banks != 0:
         raise ValueError(f"banks={banks} must divide "
                          f"subarrays={batch.geom.subarrays}")
+    axes = tuple(axes)
     rows = _resolve_rows(region, batch.geom, batch.n_dimms)
     adders = lifetime_adders(batch, ages, temps, refresh_ms)     # (E, D)
+    # the per-axis context is epoch-constant: refresh deltas and vdd shifts
+    # don't depend on the age/temperature schedule (temp and age terms
+    # cancel in the refresh delta)
+    ctx_d, ctx_g = _axis_context(batch, axes, temp_C=85.0,
+                                 refresh_ms=refresh_ms, vdd=vdd)
     args = (batch, jnp.asarray(rows, jnp.int32),
             jnp.asarray(pattern_stress(patterns)), jnp.asarray(adders.T))
-    statics = dict(guard_cycles=guard_cycles, iters=iters, multibit=multibit,
-                   diagnostics=diagnostics, banks=banks)
     argnums = (0, 1, 3) if rows.ndim == 2 else (0, 3)
+    if ctx_d is not None:
+        args = args + (ctx_d, ctx_g)
+        argnums = argnums + (4,)
+    statics = dict(guard_cycles=guard_cycles, iters=iters, multibit=multibit,
+                   diagnostics=diagnostics, banks=banks, axes=axes,
+                   retention=retention)
     out = _dispatch("lifetime", mesh, _lifetime_impl, _lifetime_jit, args,
                     statics, batch_argnums=argnums)
     # drop the bank axis in whole-DIMM mode (timings (D,E,1,4) -> (D,E,4))
@@ -730,6 +1048,103 @@ def lifetime_population(batch: DimmBatch, ages, temps, *,
     return res
 
 
+# ------------------------------------------- operating-grid sweeps (N-axis)
+
+def operating_grid_tables(batch: DimmBatch, points) -> tuple:
+    """HOST-side tables for a static grid of ``OperatingPoint``s.
+
+    Returns ``(t_g, adders_dg, shifts_dg, keys_g, retx_g)``: per-point
+    timing rows (G, 4) f32, per-DIMM condition adders and voltage shifts
+    (D, G) f32 (DIMM-leading, sharded with the batch), and per-point hash
+    keys (G,) uint32 / retention stresses (G,) f32.  Keys fold the
+    quantized timing/vdd/refresh coordinates via ``timing.op_point_key`` —
+    conditions (temperature) never key a draw.
+    """
+    t_g = np.asarray([[getattr(pt.timing, p) for p in PARAMS]
+                      for pt in points], np.float32)
+    adders_dg = np.stack([condition_adders(batch, pt.temp_C, pt.refresh_ms)
+                          for pt in points], axis=1).astype(np.float32)
+    vc = np.asarray(batch.vdd_coef, np.float32)
+    shifts_dg = np.stack([access_vdd_shift(vc, pt.vdd) for pt in points],
+                         axis=1)
+    keys = []
+    for pt in points:
+        tq = 0
+        for p in PARAMS:
+            tq = (tq * 0x9E3779B9 + AXES[p].quantize(getattr(pt.timing, p))) \
+                & 0xFFFFFFFF
+        keys.append(op_point_key(tq, AXES["vdd"].quantize(pt.vdd),
+                                 AXES["refresh"].quantize(pt.refresh_ms)))
+    keys_g = np.asarray(keys, np.uint32)
+    retx_g = np.asarray([retention_stress(pt.temp_C, pt.refresh_ms, pt.vdd)
+                         for pt in points], np.float32)
+    return t_g, adders_dg, shifts_dg, keys_g, retx_g
+
+
+def _op_grid_impl(batch: DimmBatch, rows, stress, t_g, adders_dg, shifts_dg,
+                  keys_g, retx_g, *, iters: int, multibit: bool,
+                  banks: int = 1, retention: bool = True):
+    """lax.scan over a static operating-point grid: per point, the full
+    two-channel region evaluation of every DIMM (``_op_region_eval``).
+    Returns ``(fails, lam)`` shaped (D, G, banks) — per-DIMM results are
+    independent across points (no sweep/stop logic), so the scan carries
+    no state and chunk/shard partitions of D commute with it.
+    """
+    D = batch.serial.shape[0]
+    S = batch.geom.subarrays
+
+    def point(_, xs):
+        t_pt, adder_g, shift_g, key_g, retx = xs
+        t_subs = jnp.broadcast_to(t_pt[None, None, :], (D, S, len(PARAMS)))
+        return None, _op_region_eval(batch, t_subs, rows, stress, adder_g,
+                                     shift_g, OP_GRID_LANE, key_g, iters,
+                                     multibit, banks, retention, retx)
+
+    xs = (t_g, adders_dg.T, shifts_dg.T, keys_g, retx_g)
+    _, (fails, lam) = jax.lax.scan(point, None, xs)      # (G, D, banks)
+    return jnp.moveaxis(fails, 0, 1), jnp.moveaxis(lam, 0, 1)
+
+
+_op_grid_jit = functools.partial(
+    jax.jit, static_argnames=("iters", "multibit", "banks",
+                              "retention"))(_op_grid_impl)
+
+
+def operating_grid_arrays(batch: DimmBatch, points, *,
+                          region: str = "worst",
+                          patterns=DEFAULT_PATTERNS,
+                          iters: int = DEFAULT_ITERS,
+                          multibit_only: bool = False, banks: int = 1,
+                          retention: bool = True, mesh=None) -> dict:
+    """Evaluate every DIMM at every ``OperatingPoint`` in ``points`` — the
+    batched N-axis (timing x voltage x temperature x refresh) sweep.
+
+    One jitted scan over the G grid points; returns ``fails`` (D, G[, banks])
+    bool Monte-Carlo region outcomes and ``lam`` (D, G[, banks]) f32
+    expected failure counts (access + retention channels).  The per-point
+    loop reference is ``DimmModel.operating_point_eval``; parity holds
+    decision-for-decision via the shared counter hash (lam to float32
+    reduction tolerance).  ``mesh`` shards the DIMM axis.
+    """
+    if batch.geom.subarrays % banks != 0:
+        raise ValueError(f"banks={banks} must divide "
+                         f"subarrays={batch.geom.subarrays}")
+    rows = _resolve_rows(region, batch.geom, batch.n_dimms)
+    t_g, adders_dg, shifts_dg, keys_g, retx_g = \
+        operating_grid_tables(batch, points)
+    args = (batch, jnp.asarray(rows, jnp.int32),
+            jnp.asarray(pattern_stress(patterns)), jnp.asarray(t_g),
+            jnp.asarray(adders_dg), jnp.asarray(shifts_dg),
+            jnp.asarray(keys_g), jnp.asarray(retx_g))
+    statics = dict(iters=iters, multibit=multibit_only, banks=banks,
+                   retention=retention)
+    argnums = (0, 1, 4, 5) if rows.ndim == 2 else (0, 4, 5)
+    fails, lam = _dispatch("op_grid", mesh, _op_grid_impl, _op_grid_jit,
+                           args, statics, batch_argnums=argnums)
+    sq = (lambda a: a[..., 0]) if banks == 1 else (lambda a: a)
+    return {"fails": np.asarray(sq(fails)), "lam": np.asarray(sq(lam))}
+
+
 # --------------------------------------------------- full-grid batched API
 
 def _pack_coeffs(batch: DimmBatch, pidx: int, t_op, stress, adder,
@@ -744,6 +1159,21 @@ def _pack_coeffs(batch: DimmBatch, pidx: int, t_op, stress, adder,
         jnp.full_like(base_eff, t_op), batch.sigma, batch.outlier_rate,
         batch.outlier_ns,
     ], axis=1).astype(jnp.float32)
+
+
+def _pack_op_coeffs(batch: DimmBatch, pidx: int, t_op, stress, adder,
+                    chip, sub_idx, shift, ret_x):
+    """(D, 15) operating-point coefficient rows for the fail_prob_op kernel:
+    the 9 access coefficients of ``_pack_coeffs`` plus the host-computed
+    (D,) voltage shift and the retention channel (ret_base, ret_k, the
+    scalar retention stress ``ret_x``, ret_sigma, ret_drop)."""
+    cf = _pack_coeffs(batch, pidx, t_op, stress, adder, chip, sub_idx)
+    extra = jnp.stack([
+        jnp.asarray(shift, jnp.float32), batch.ret_base, batch.ret_k,
+        jnp.full_like(batch.ret_base, np.float32(ret_x)), batch.ret_sigma,
+        batch.ret_drop,
+    ], axis=1).astype(jnp.float32)
+    return jnp.concatenate([cf, extra], axis=1)
 
 
 def _fail_prob_impl(row_src, d_mat, coeffs, *, cols: int, pallas: bool):

@@ -22,9 +22,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.latency import fail_mixture
+from repro.core.latency import fail_mixture, retention_fail_mixture
 
 N_COEFFS = 9  # base_eff, k_bl', k_wl', k_mat', k_row', t_op, sigma, rate, ns
+# operating-point row: N_COEFFS access coefficients plus the voltage shift
+# and the retention channel (ret_base, ret_k, ret_x, ret_sigma, ret_drop)
+N_OP_COEFFS = 15
 
 
 def cell_probs(rf, colf, even, d_mat, cf, n_rows: int, n_cols: int,
@@ -43,6 +46,35 @@ def cell_probs(rf, colf, even, d_mat, cf, n_rows: int, n_cols: int,
     d_row = rf / (n_rows - 1.0)
     t = cf[0] + cf[1] * d_bl + cf[2] * d_wl + cf[3] * d_mat + cf[4] * d_row
     return fail_mixture(t, cf[5], cf[6], cf[7], cf[8], xp=jnp)
+
+
+def op_cell_probs(rf, colf, even, d_mat, cf, n_rows: int, n_cols: int,
+                  open_bitline: bool = True, voltage: bool = False,
+                  retention: bool = False):
+    """Per-cell failure probability at a full *operating point*: the access
+    channel of ``cell_probs`` shifted by the folded voltage term (cf[9],
+    static ``voltage``) plus — static ``retention`` — the refresh/temperature
+    retention channel, whose slowness is the same stress-premultiplied
+    design-variation sum the access channel uses (``t - cf[0]``).  Channel
+    probabilities ADD (expected-count channels), so summing the returned grid
+    over cells yields the two-channel lambda directly.  With both flags off
+    this is graph-identical to ``cell_probs`` on cf[:9].
+    """
+    if open_bitline:
+        d_bl = jnp.where(even, rf, (n_rows - 1.0) - rf) / (n_rows - 1.0)
+    else:
+        d_bl = rf / (n_rows - 1.0)
+    d_wl = colf / (n_cols - 1.0)
+    d_row = rf / (n_rows - 1.0)
+    t = cf[0] + cf[1] * d_bl + cf[2] * d_wl + cf[3] * d_mat + cf[4] * d_row
+    if voltage:
+        t = t + cf[9]
+    p = fail_mixture(t, cf[5], cf[6], cf[7], cf[8], xp=jnp)
+    if retention:
+        slow = cf[1] * d_bl + cf[2] * d_wl + cf[3] * d_mat + cf[4] * d_row
+        p = p + retention_fail_mixture(slow, cf[10], cf[11], cf[12], cf[13],
+                                       cf[7], cf[14], xp=jnp)
+    return p
 
 
 def _make_kernel(n_rows: int, n_cols: int, open_bitline: bool):
@@ -78,6 +110,50 @@ def fail_prob(row_src, d_mat, coeffs, *, cols: int, open_bitline: bool = True,
         in_specs=[pl.BlockSpec((R, 1), lambda i: (0, 0)),
                   pl.BlockSpec((1, 1), lambda i: (i, 0)),
                   pl.BlockSpec((1, N_COEFFS), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, R, cols), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, R, cols), jnp.float32),
+        interpret=interpret,
+    )(row_src, d_mat, coeffs)
+
+
+def _make_op_kernel(n_rows: int, n_cols: int, open_bitline: bool,
+                    voltage: bool, retention: bool):
+    def kernel(rs_ref, dm_ref, cf_ref, out_ref):
+        rows = rs_ref[...].astype(jnp.float32)            # (R, 1)
+        cf = cf_ref[...]                                  # (1, N_OP_COEFFS)
+        rf = jnp.broadcast_to(rows, (n_rows, n_cols))
+        colf = jax.lax.broadcasted_iota(jnp.float32, (n_rows, n_cols), 1)
+        even = (jax.lax.broadcasted_iota(jnp.int32, (n_rows, n_cols), 1)
+                % 2) == 0
+        p = op_cell_probs(rf, colf, even, dm_ref[0, 0], cf[0], n_rows,
+                          n_cols, open_bitline, voltage, retention)
+        out_ref[...] = p[None]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("cols", "open_bitline",
+                                             "voltage", "retention",
+                                             "interpret"))
+def fail_prob_op(row_src, d_mat, coeffs, *, cols: int,
+                 open_bitline: bool = True, voltage: bool = False,
+                 retention: bool = False, interpret: bool = True):
+    """Operating-point variant of ``fail_prob``: coeffs is the
+    (N_OP_COEFFS,) f32 row ``[*access 0-8, vdd_shift, ret_base, ret_k,
+    ret_x, ret_sigma, ret_drop]``; static ``voltage``/``retention`` gate the
+    extra terms (both off => value-identical to ``fail_prob`` on cf[:9]).
+    Returns the (M, R, C) summed two-channel probability grid."""
+    row_src = jnp.asarray(row_src, jnp.int32).reshape(-1, 1)
+    d_mat = jnp.asarray(d_mat, jnp.float32).reshape(-1, 1)
+    coeffs = jnp.asarray(coeffs, jnp.float32).reshape(1, N_OP_COEFFS)
+    R, M = row_src.shape[0], d_mat.shape[0]
+    kern = _make_op_kernel(R, cols, open_bitline, voltage, retention)
+    return pl.pallas_call(
+        kern,
+        grid=(M,),
+        in_specs=[pl.BlockSpec((R, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (i, 0)),
+                  pl.BlockSpec((1, N_OP_COEFFS), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((1, R, cols), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((M, R, cols), jnp.float32),
         interpret=interpret,

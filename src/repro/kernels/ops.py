@@ -16,6 +16,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.bank_sched import bank_sched as _sched_pallas
 from repro.kernels.bit_signature import bit_signature as _bs_pallas
 from repro.kernels.fail_prob import fail_prob as _fp_pallas
+from repro.kernels.fail_prob import fail_prob_op as _fpo_pallas
 from repro.kernels.rc_transient import rc_transient as _rc_pallas
 from repro.kernels.secded import encode_checks as _enc_pallas
 from repro.kernels.secded import syndrome as _syn_pallas
@@ -67,6 +68,38 @@ def fail_prob_batch(row_src, d_mat, coeffs, *, cols: int,
         pallas = use_pallas()
     fn = functools.partial(fail_prob, cols=cols, open_bitline=open_bitline,
                            pallas=pallas)
+    return jax.vmap(fn, in_axes=(0, None, 0))(row_src, d_mat, coeffs)
+
+
+def fail_prob_op(row_src, d_mat, coeffs, *, cols: int,
+                 open_bitline: bool = True, voltage: bool = False,
+                 retention: bool = False, pallas: bool | None = None):
+    """Operating-point (two error channel) variant of ``fail_prob``: coeffs
+    is the (N_OP_COEFFS,) row with the folded voltage shift and retention
+    channel appended; static ``voltage``/``retention`` flags gate them (both
+    off => value-identical to ``fail_prob`` on coeffs[:9]).  ``pallas=None``
+    resolves REPRO_FORCE_REF at trace time, per the ``fail_prob``
+    convention."""
+    if pallas is None:
+        pallas = use_pallas()
+    if not pallas:
+        return _ref.fail_prob_op(row_src, d_mat, coeffs, cols=cols,
+                                 open_bitline=open_bitline, voltage=voltage,
+                                 retention=retention)
+    return _fpo_pallas(row_src, d_mat, coeffs, cols=cols,
+                       open_bitline=open_bitline, voltage=voltage,
+                       retention=retention, interpret=interpret_mode())
+
+
+def fail_prob_op_batch(row_src, d_mat, coeffs, *, cols: int,
+                       open_bitline: bool = True, voltage: bool = False,
+                       retention: bool = False, pallas: bool | None = None):
+    """``fail_prob_op`` vmapped over a leading population (DIMM) axis of
+    ``row_src``/``coeffs``, mirroring ``fail_prob_batch``."""
+    if pallas is None:
+        pallas = use_pallas()
+    fn = functools.partial(fail_prob_op, cols=cols, open_bitline=open_bitline,
+                           voltage=voltage, retention=retention, pallas=pallas)
     return jax.vmap(fn, in_axes=(0, None, 0))(row_src, d_mat, coeffs)
 
 

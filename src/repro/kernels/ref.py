@@ -28,6 +28,27 @@ def fail_prob(row_src, d_mat, coeffs, *, cols: int, open_bitline: bool = True):
                       open_bitline)
 
 
+def fail_prob_op(row_src, d_mat, coeffs, *, cols: int,
+                 open_bitline: bool = True, voltage: bool = False,
+                 retention: bool = False):
+    """(M, R, C) two-channel (access + retention) probability grid at one
+    operating point — pure-jnp oracle of ``kernels/fail_prob.py::
+    fail_prob_op`` (same ``op_cell_probs`` helper, same bits; both flags off
+    reduces to the ``fail_prob`` graph on coeffs[:9])."""
+    from repro.kernels.fail_prob import op_cell_probs
+    row_src = jnp.asarray(row_src, jnp.int32)
+    d_mat = jnp.asarray(d_mat, jnp.float32)
+    coeffs = jnp.asarray(coeffs, jnp.float32)
+    R = row_src.shape[0]
+    rf = jnp.broadcast_to(row_src.astype(jnp.float32)[None, :, None],
+                          (d_mat.shape[0], R, cols))
+    colf = jax.lax.broadcasted_iota(jnp.float32, (d_mat.shape[0], R, cols), 2)
+    even = (jax.lax.broadcasted_iota(jnp.int32, (d_mat.shape[0], R, cols), 2)
+            % 2) == 0
+    return op_cell_probs(rf, colf, even, d_mat[:, None, None], coeffs, R,
+                         cols, open_bitline, voltage, retention)
+
+
 def bank_sched(q_bank, q_row, q_write, q_arrive, q_valid,
                open_row, ready, pre_ready, bus_ready, last_act, faw_old,
                t_now, tc, bank_rank, bank_chan, *,

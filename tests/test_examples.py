@@ -19,6 +19,8 @@ def test_quickstart_fast_path(capsys):
     _load("quickstart").main(fast=True)
     out = capsys.readouterr().out
     assert "[diva-profiling] operating point" in out
+    assert "[operating-point] N-axis envelope" in out
+    assert "[operating-point] energy proxy" in out
     assert "[memsim]" in out and "mean speedup" in out
     assert "[checkpoint-ecc]" in out and "recovered=True" in out
     assert "[train] loss" in out

@@ -84,6 +84,63 @@ def test_fail_prob_dispatch_ref_mode(monkeypatch):
         np.asarray(ref.fail_prob(row_src, d_mat, coeffs, cols=32)))
 
 
+def _op_coeffs():
+    cf9 = np.array([3.9, 2.1, 0.4, 0.8, 0.4, 7.5, 0.15, 3e-6, 3.5],
+                   np.float32)
+    extra = np.array([1.2, 4.0, 0.4, 1.0, 0.3, 1.2], np.float32)
+    return cf9, np.concatenate([cf9, extra])
+
+
+def test_fail_prob_op_flags_off_identical_to_fail_prob():
+    """The operating-point kernel with both channel flags off traces the
+    exact cell_probs graph — value-identical to fail_prob, bit for bit."""
+    from repro.kernels import ops
+    rng = np.random.default_rng(5)
+    row_src = rng.integers(0, 64, 64).astype(np.int32)
+    d_mat = np.linspace(0.1, 1.0, 4).astype(np.float32)
+    cf9, cf15 = _op_coeffs()
+    for pallas in (True, False):
+        np.testing.assert_array_equal(
+            np.asarray(ops.fail_prob(row_src, d_mat, cf9, cols=64,
+                                     pallas=pallas)),
+            np.asarray(ops.fail_prob_op(row_src, d_mat, cf15, cols=64,
+                                        pallas=pallas)))
+
+
+@pytest.mark.parametrize("voltage,retention",
+                         [(True, False), (False, True), (True, True)])
+def test_fail_prob_op_kernel_matches_ref(voltage, retention):
+    """Pallas (interpret) vs jnp oracle with the extra channels live — the
+    same 1-float32-ulp contract as the base kernel (FMA contraction)."""
+    from repro.kernels import ref
+    from repro.kernels.fail_prob import fail_prob_op as fpo_pallas
+    rng = np.random.default_rng(6)
+    row_src = rng.integers(0, 64, 64).astype(np.int32)
+    d_mat = np.linspace(0.1, 1.0, 4).astype(np.float32)
+    _, cf15 = _op_coeffs()
+    k = np.asarray(fpo_pallas(row_src, d_mat, cf15, cols=64, voltage=voltage,
+                              retention=retention, interpret=True))
+    r = np.asarray(ref.fail_prob_op(row_src, d_mat, cf15, cols=64,
+                                    voltage=voltage, retention=retention))
+    assert k.shape == (4, 64, 64)
+    np.testing.assert_allclose(k, r, atol=1e-5, rtol=1e-5)
+    # two summed per-cell channel probabilities: in [0, 2] on both paths
+    assert (k >= 0).all() and (k <= 2).all()
+
+
+def test_fail_prob_op_dispatch_ref_mode(monkeypatch):
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    from repro.kernels import ops, ref
+    row_src = np.arange(32, dtype=np.int32)
+    d_mat = np.linspace(0.2, 1.0, 2).astype(np.float32)
+    _, cf15 = _op_coeffs()
+    np.testing.assert_array_equal(
+        np.asarray(ops.fail_prob_op(row_src, d_mat, cf15, cols=32,
+                                    voltage=True, retention=True)),
+        np.asarray(ref.fail_prob_op(row_src, d_mat, cf15, cols=32,
+                                    voltage=True, retention=True)))
+
+
 # --------------------------------------------------------- profiling parity
 
 def test_profile_population_matches_legacy_loop_diva():

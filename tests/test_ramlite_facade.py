@@ -1,0 +1,35 @@
+"""The ``core.ramlite`` compatibility facade: deprecation + laziness.
+
+The facade must (a) warn once at import that new code belongs on
+``repro.memsim``, and (b) stay a pure lazy view — importing it must not
+synthesize traces or touch the simulator (the ``N_TRACE_BUILDS`` no-rebuild
+regression contract)."""
+import importlib
+import sys
+import warnings
+
+import pytest
+
+
+def test_ramlite_import_warns_and_builds_no_traces():
+    from repro.memsim import sim
+    builds_before = sim.N_TRACE_BUILDS
+    sys.modules.pop("repro.core.ramlite", None)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        mod = importlib.import_module("repro.core.ramlite")
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)
+           and "repro.memsim" in str(w.message)]
+    assert dep, "facade import must raise the DeprecationWarning"
+    assert sim.N_TRACE_BUILDS == builds_before, \
+        "importing the facade must not rebuild traces"
+    # the lazy attribute view still works after the warning
+    assert mod.N_TRACE_BUILDS == sim.N_TRACE_BUILDS
+
+
+def test_ramlite_facade_still_delegates():
+    import repro.core.ramlite as ramlite
+    from repro.memsim import sim
+    assert ramlite.N_TRACES == sim.N_TRACES
+    with pytest.raises(AttributeError):
+        ramlite.definitely_not_an_attribute

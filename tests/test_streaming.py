@@ -439,19 +439,21 @@ out = stream_error_summary(synthetic_fleet(n, TINY, seed=0), "trp", 7.5,
 assert out["n_dimms"] == n and out["n_chunks"] == 25
 peak_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
 print(f"peak_rss_mb={peak_mb:.0f}")
-sys.exit(0 if peak_mb < 3072 else 17)
+sys.exit(0 if peak_mb < 4096 else 17)
 """
 
 
 @pytest.mark.slow
 def test_streamed_100k_smoke_stays_under_rss_budget():
     """100k TINY DIMMs through the streamed error summary must stay under
-    3 GB peak RSS — the dense (D, mats, rows, cols) f32 grids alone would
-    be ~6.5 GB, so this fails if ANY step materializes a dense population
-    tensor (measured in a subprocess so other tests' allocations can't
-    inflate the high-water mark; the ceiling leaves ~4x headroom over the
-    ~0.7 GB a 4096-DIMM chunk measures in isolation, because hugepage /
-    allocator state can inflate the same program's RSS run to run)."""
+    4 GB peak RSS — the dense (D, mats, rows, cols) f32 grids alone would
+    be ~6.5 GB (>7 GB with process overhead), so this fails if ANY step
+    materializes a dense population tensor (measured in a subprocess so
+    other tests' allocations can't inflate the high-water mark; the ceiling
+    leaves ~5x headroom over the ~0.7 GB a 4096-DIMM chunk measures in
+    isolation, because hugepage / allocator state can inflate the same
+    program's RSS run to run — full-suite runs have measured ~3.5 GB for
+    the identical child program that takes 0.7 GB alone)."""
     env = dict(os.environ, REPRO_FORCE_REF="1", JAX_PLATFORMS="cpu",
                PYTHONPATH=str(Path(__file__).resolve().parents[1] / "src"))
     proc = subprocess.run([sys.executable, "-c", RSS_SMOKE], env=env,
