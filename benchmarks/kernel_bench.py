@@ -56,12 +56,15 @@ def backend_tag() -> str:
 
 
 def _bench(fn, *args, iters=3, **kw):
-    fn(*args, **kw)  # compile
-    t0 = time.time()
+    import jax
+    jax.block_until_ready(fn(*args, **kw))  # compile
+    t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args, **kw)
-    _ = np.asarray(out if not isinstance(out, dict) else out[list(out)[0]])
-    return (time.time() - t0) / iters * 1e6  # us
+    # block on the WHOLE output pytree: np.asarray of one dict entry would
+    # leave sibling outputs in flight and time dispatch, not compute
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
 def kernels():
@@ -132,15 +135,15 @@ def profile_population_speedup(n_dimms: int = 8, iters: int = 1) -> dict:
     batch = DimmBatch.from_population(pop)
 
     profile_population_arrays(batch, temp_C=55.0, multibit_only=True)  # compile
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         arr = profile_population_arrays(batch, temp_C=55.0, multibit_only=True)
-    t_batched = (time.time() - t0) / iters
+    t_batched = (time.perf_counter() - t0) / iters
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         legacy = [diva_profile_loop(d, temp_C=55.0) for d in pop]
-    t_loop = (time.time() - t0) / iters
+    t_loop = (time.perf_counter() - t0) / iters
 
     match = all(tuple(row) == (tp.trcd, tp.tras, tp.trp, tp.twr)
                 for row, tp in zip(np.round(arr, 6), legacy))
@@ -163,18 +166,18 @@ def shuffling_gain_speedup(n_dimms: int = 8, n_accesses: int = 400,
     seeds = np.arange(n_dimms)
 
     shuffling_gain_population(probs, seeds=seeds, n_accesses=n_accesses)  # compile
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         batched = shuffling_gain_population(probs, seeds=seeds,
                                             n_accesses=n_accesses)
-    t_batched = (time.time() - t0) / iters
+    t_batched = (time.perf_counter() - t0) / iters
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         legacy = [shuffling_gain_loop(probs[d], n_accesses=n_accesses,
                                       seed=int(seeds[d]))
                   for d in range(n_dimms)]
-    t_loop = (time.time() - t0) / iters
+    t_loop = (time.perf_counter() - t0) / iters
 
     match = all(int(batched["total"][d]) == legacy[d]["total"]
                 and batched["frac_no_shuffle"][d] == legacy[d]["frac_no_shuffle"]
@@ -205,15 +208,15 @@ def lifetime_speedup(n_dimms: int = 4, n_epochs: int = 3,
     temps = np.full(n_epochs, 55.0)
 
     lifetime_population(batch, ages, temps)  # compile
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         out = lifetime_population(batch, ages, temps)
-    t_batched = (time.time() - t0) / iters
+    t_batched = (time.perf_counter() - t0) / iters
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         legacy = [lifetime_loop(d, ages, temps) for d in pop]
-    t_loop = (time.time() - t0) / iters
+    t_loop = (time.perf_counter() - t0) / iters
 
     match = all(
         np.array_equal(out["timings"][:, d], legacy[d]["timings"])
@@ -245,15 +248,15 @@ def recover_mapping_speedup(n_dimms: int = 24, iters: int = 1) -> dict:
     counts, expected = counts[0], expected[0]
 
     recover_mapping_population(counts, expected)  # compile
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         rec = recover_mapping_population(counts, expected)
-    t_batched = (time.time() - t0) / iters
+    t_batched = (time.perf_counter() - t0) / iters
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         loop = recover_mapping_loop(counts, expected)
-    t_loop = (time.time() - t0) / iters
+    t_loop = (time.perf_counter() - t0) / iters
 
     match = all(np.array_equal(rec[k], loop[k]) for k in
                 ("ext_bit", "xor", "confidence", "n_significant_pairs",
@@ -283,15 +286,15 @@ def memsim_grid_speedup(n_dimms: int = 3, n_requests: int = 250,
     kw = dict(n_requests=n_requests, scheduler="inorder")
 
     sim.system_speedup_population(tabs, **kw)  # compile
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         fused = sim.system_speedup_population(tabs, **kw)
-    t_batched = (time.time() - t0) / iters
+    t_batched = (time.perf_counter() - t0) / iters
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         loop = reference.system_speedup_loop(tabs, **kw)
-    t_loop = (time.time() - t0) / iters
+    t_loop = (time.perf_counter() - t0) / iters
 
     match = (np.array_equal(fused["per_dimm_workload_speedup"],
                             loop["per_dimm_workload_speedup"])
@@ -340,16 +343,16 @@ def operating_grid_speedup(n_dimms: int = 8, iters: int = 1) -> dict:
     rows = worst_rows_internal(TINY)
 
     operating_grid_arrays(batch, points)  # compile
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         grid = operating_grid_arrays(batch, points)
-    t_batched = (time.time() - t0) / iters
+    t_batched = (time.perf_counter() - t0) / iters
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         legacy = [[d.operating_point_eval(pt, rows) for pt in points]
                   for d in pop]
-    t_loop = (time.time() - t0) / iters
+    t_loop = (time.perf_counter() - t0) / iters
 
     match = all(
         bool(grid["fails"][di, gi]) == legacy[di][gi][0]
@@ -386,17 +389,17 @@ def stream_profile_speedup(n_sizes: int = 10, chunk_size: int = 8,
     fleets = [synthetic_fleet(n, TINY, seed=seed) for n in sizes]
 
     jits_before = len(substrate._CHUNK_JIT_CACHE)
-    t0 = time.time()
+    t0 = time.perf_counter()
     streamed = [stream_profile_population(f, chunk_size=chunk_size,
                                           collect=True)["tables"]
                 for f in fleets]
-    t_stream = time.time() - t0
+    t_stream = time.perf_counter() - t0
     new_jits = len(substrate._CHUNK_JIT_CACHE) - jits_before
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     dense = [np.asarray(profile_population_arrays(f.materialize()))
              for f in fleets]
-    t_dense = time.time() - t0
+    t_dense = time.perf_counter() - t0
 
     match = all(np.array_equal(s, d) for s, d in zip(streamed, dense))
     return {"n_fleets": len(sizes), "n_dimms_total": int(sum(sizes)),
@@ -436,13 +439,13 @@ def bench_streaming(n_dimms: int, chunk_size: int, budget_mb: int,
         sys.exit("FAIL: streamed prefix tables != dense tables")
 
     fleet = synthetic_fleet(n_dimms, TINY, seed=0)
-    t0 = time.time()
+    t0 = time.perf_counter()
     prof = stream_profile_population(fleet, chunk_size=chunk_size)
-    t_profile = time.time() - t0
-    t0 = time.time()
+    t_profile = time.perf_counter() - t0
+    t0 = time.perf_counter()
     disc = stream_discover_generations(fleet, chunk_size=chunk_size,
                                        collect_labels=False)
-    t_discover = time.time() - t0
+    t_discover = time.perf_counter() - t0
 
     # the N-axis operating-point sweep rides the same streaming substrate:
     # a bounded prefix fleet (the grid multiplies per-DIMM cost by G, so the
@@ -450,10 +453,10 @@ def bench_streaming(n_dimms: int, chunk_size: int, budget_mb: int,
     from repro.core.streaming import stream_operating_grid
     op_fleet = min(n_dimms, 2048)
     points = _operating_points()
-    t0 = time.time()
+    t0 = time.perf_counter()
     og = stream_operating_grid(synthetic_fleet(op_fleet, TINY, seed=0),
                                points, chunk_size=chunk_size)
-    t_op = time.time() - t0
+    t_op = time.perf_counter() - t0
     op_fail_frac = np.asarray(og["fail_stats"]["mean"], np.float64)
 
     peak_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0

@@ -23,9 +23,9 @@ from repro.core import ramlite, shuffling, spice
 
 
 def _timed(fn):
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = fn()
-    return out, time.time() - t0
+    return out, time.perf_counter() - t0
 
 
 def fig6_row_sweep():

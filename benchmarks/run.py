@@ -73,13 +73,33 @@ _BENCH_SCHEMA: dict[str, type | tuple] = {
 _BENCH_DATE_RE = re.compile(r"^\d{4}-\d{2}-\d{2}$")
 _BENCH_BACKEND_RE = re.compile(r"^[a-z0-9]+(-[a-z0-9]+)*$")
 
+# Per-file extensions of the required core: the serving-layer trajectory
+# additionally commits its gate results, and a committed entry must have
+# PASSED the gates (a false here means someone committed a failing run).
+_BENCH_FILE_SCHEMAS: dict[str, dict[str, type | tuple]] = {
+    "BENCH_serve.json": {
+        "queries_per_s": (int, float), "hits": int, "misses": int,
+        "conventional": int, "n_generations": int,
+        "staleness_bound_years": (int, float),
+        "max_staleness_years": (int, float), "staleness_bounded": bool,
+        "ckpt_roundtrip_ok": bool,
+    },
+}
+_BENCH_TRUE_KEYS: dict[str, tuple] = {
+    "BENCH_serve.json": ("staleness_bounded", "ckpt_roundtrip_ok",
+                         "prefix_parity"),
+}
 
-def validate_bench_entry(entry, where: str) -> list[str]:
+
+def validate_bench_entry(entry, where: str, *,
+                         extra_schema: dict | None = None,
+                         true_keys: tuple = ()) -> list[str]:
     """Schema check for one BENCH trajectory entry; returns error strings."""
     if not isinstance(entry, dict):
         return [f"{where}: entry is not a JSON object"]
     errs = []
-    for key, typ in _BENCH_SCHEMA.items():
+    schema = dict(_BENCH_SCHEMA, **(extra_schema or {}))
+    for key, typ in schema.items():
         if key not in entry:
             errs.append(f"{where}: missing required key {key!r}")
             continue
@@ -102,6 +122,10 @@ def validate_bench_entry(entry, where: str) -> list[str]:
     for key in ("profile_s", "peak_rss_mb"):
         if entry[key] < 0:
             errs.append(f"{where}: negative {key}={entry[key]}")
+    for key in true_keys:
+        if entry.get(key) is not True:
+            errs.append(f"{where}: gate {key}={entry.get(key)!r} — only "
+                        "passing runs may be committed")
     return errs
 
 
@@ -124,7 +148,10 @@ def check_bench_files(bench_dir: Path) -> list[str]:
             errs.append(f"{path.name}: trajectory must be a non-empty list")
             continue
         for i, entry in enumerate(history):
-            errs.extend(validate_bench_entry(entry, f"{path.name}[{i}]"))
+            errs.extend(validate_bench_entry(
+                entry, f"{path.name}[{i}]",
+                extra_schema=_BENCH_FILE_SCHEMAS.get(path.name),
+                true_keys=_BENCH_TRUE_KEYS.get(path.name, ())))
     return errs
 
 

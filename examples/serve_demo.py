@@ -1,19 +1,66 @@
-"""Batched serving demo: prefill + greedy decode over three architectures
-(dense GQA, attention-free RWKV6, encoder-decoder Whisper), plus an int8
-KV-cache variant.
+"""Serving demo, both meanings of the word:
 
-Run:  PYTHONPATH=src python examples/serve_demo.py
+  1. fleet serving — a ``repro.serve.FleetServer`` ingests a streaming DIMM
+     fleet, answers timing-table queries, re-profiles stale DIMMs as the
+     fleet ages, and survives a restart from its ECC-protected checkpoint;
+  2. model serving — batched prefill + greedy decode over three
+     architectures (dense GQA, attention-free RWKV6, encoder-decoder
+     Whisper), plus an int8 KV-cache variant.
+
+Run:  PYTHONPATH=src python examples/serve_demo.py [--fast]
+
+``--fast`` runs only the fleet-serving section (the CI smoke path).
 """
 import sys
+import tempfile
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-import jax
 import numpy as np
 
 
-def main():
+def fleet_section() -> None:
+    from repro.core.geometry import TINY
+    from repro.core.population import synthetic_fleet
+    from repro.serve import FleetConfig, FleetServer
+
+    fleet = synthetic_fleet(96, TINY, seed=0)
+    with tempfile.TemporaryDirectory() as ckdir:
+        server = FleetServer(fleet, FleetConfig(chunk_size=48),
+                             checkpoint_dir=ckdir)
+        stats = server.ingest(now=0.0)
+        print(f"fleet ingest: {stats['ingested']} DIMMs -> "
+              f"hits={stats['hits']} misses={stats['misses']} "
+              f"conventional={stats['conventional']} "
+              f"generations={stats['n_generations']}")
+        rec = server.query(7)
+        print(f"query serial 7: table={rec['table'].tolist()} "
+              f"path={rec['path']} label={rec['label']} "
+              f"due_at={rec['due_at']:.2f}y")
+        tick = server.tick(3.0)
+        rep = server.staleness()
+        print(f"tick(3.0y): re-profiled {tick['reprofiled']} due DIMMs; "
+              f"max staleness {rep['max_staleness_years']:.2f}y "
+              f"(bound {rep['bound_years']:.2f}y)")
+        server.save(step=1)
+
+        # restart: a fresh server over the same stream restores the whole
+        # serving state (tables, labels, generation cache, deadlines)
+        restored = FleetServer(fleet, FleetConfig(chunk_size=48),
+                               checkpoint_dir=ckdir)
+        restored.load()
+        serials = np.arange(fleet.n_dimms)
+        same = np.array_equal(restored.query_batch(serials),
+                              server.query_batch(serials))
+        print(f"checkpoint restart: {len(serials)} tables restored, "
+              f"bit-identical={same}")
+        assert same
+
+
+def llm_section() -> None:
+    import jax
+
     from repro.configs.registry import get_smoke_config
     from repro.data.pipeline import make_batch
     from repro.launch.serve import generate
@@ -26,7 +73,8 @@ def main():
         batch["tokens"] = batch["tokens"][:, :-1]
         toks, stats = generate(cfg, params, batch, max_new=12)
         print(f"{arch:16s} generated {tuple(toks.shape)} "
-              f"prefill={stats['prefill_s']:.2f}s decode={stats['tok_per_s']:.1f} tok/s")
+              f"prefill={stats['prefill_s']:.2f}s "
+              f"decode={stats['tok_per_s']:.1f} tok/s")
 
     # int8 KV cache (the decode_32k hillclimb knob) on the dense arch
     cfg = get_smoke_config("deepseek-7b").replace(kv_quant=True)
@@ -39,5 +87,11 @@ def main():
     assert np.isfinite(np.asarray(toks)).all()
 
 
+def main(fast: bool = False):
+    fleet_section()
+    if not fast:
+        llm_section()
+
+
 if __name__ == "__main__":
-    main()
+    main(fast="--fast" in sys.argv[1:])

@@ -32,8 +32,16 @@ class CheckpointManager:
     protect: bool = True  # SECDED + DIVA interleave sidecars
 
     def __post_init__(self):
+        # keep=0 would make _gc slice steps[:-0] == [] and silently retain
+        # every step forever — reject it up front
+        if self.keep < 1:
+            raise ValueError(f"keep must be >= 1, got {self.keep}")
         self.dir = Path(self.directory)
         self.dir.mkdir(parents=True, exist_ok=True)
+        # a save() killed between mkdir and the atomic rename leaves a
+        # .tmp_step_* behind; nothing ever publishes it, so sweep on init
+        for orphan in self.dir.glob(".tmp_step_*"):
+            shutil.rmtree(orphan, ignore_errors=True)
 
     # ----------------------------------------------------------------- save
 
@@ -69,6 +77,18 @@ class CheckpointManager:
 
     def steps(self) -> list[int]:
         return sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*"))
+
+    def meta(self, step: int | None = None) -> dict:
+        """The saved leaf metadata (shapes/dtypes in flatten order) of one
+        step — what a restorer with a known tree STRUCTURE but unknown array
+        sizes needs to build its ``example_state`` (dict pytrees flatten in
+        sorted-key order, so a fixed key set + these shapes reconstructs the
+        example exactly)."""
+        steps = self.steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        step = steps[-1] if step is None else step
+        return json.loads((self.dir / f"step_{step}" / "meta.json").read_text())
 
     # -------------------------------------------------------------- restore
 

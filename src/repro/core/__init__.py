@@ -22,4 +22,14 @@ from repro.core.streaming import (PopulationStream, stream_discover_generations,
                                   stream_operating_grid, stream_population,
                                   stream_profile_population,
                                   stream_shuffling_gain)
-from repro.core import ecc, shuffling, spice, ramlite
+from repro.core import ecc, shuffling, spice
+
+
+def __getattr__(name):
+    # ramlite is a deprecated compatibility facade that warns on import;
+    # loading it eagerly here would make EVERY ``import repro.core`` emit
+    # the DeprecationWarning.  Resolve it lazily so only actual users pay.
+    if name == "ramlite":
+        import importlib
+        return importlib.import_module("repro.core.ramlite")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

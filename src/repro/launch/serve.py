@@ -1,6 +1,8 @@
-"""Serving driver: batched prefill + greedy decode.
+"""Serving driver: batched prefill + greedy decode — or, with ``--fleet``,
+the DIMM-fleet timing-table service (``repro.serve.FleetServer``).
 
 ``python -m repro.launch.serve --arch qwen2-0.5b --smoke --tokens 16``
+``python -m repro.launch.serve --fleet 256 --chunk 128 [--ckpt-dir D]``
 """
 from __future__ import annotations
 
@@ -25,19 +27,50 @@ def generate(cfg, params, prompt_batch, *, max_new: int = 16):
     decode = steps_mod.make_decode_step(cfg)
     jpre = jax.jit(prefill)
     jdec = jax.jit(decode)
-    t0 = time.time()
+    # jitted calls dispatch asynchronously: without block_until_ready the
+    # stopwatch measures dispatch, not compute — and wall times must come
+    # from the monotonic clock, never time.time()
+    t0 = time.perf_counter()
     logits, cache = jpre(params, prompt_batch)
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-    t_prefill = time.time() - t0
+    jax.block_until_ready(tok)
+    t_prefill = time.perf_counter() - t0
     out = [tok]
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(max_new - 1):
         tok, cache = jdec(params, cache, {"tokens": tok[:, None]})
         out.append(tok)
-    toks = jnp.stack(out, axis=1)
-    t_decode = time.time() - t0
+    toks = jax.block_until_ready(jnp.stack(out, axis=1))
+    t_decode = time.perf_counter() - t0
     return toks, {"prefill_s": t_prefill, "decode_s": t_decode,
                   "tok_per_s": B * (max_new - 1) / max(t_decode, 1e-9)}
+
+
+def serve_fleet(n_dimms: int, chunk_size: int,
+                ckpt_dir: str | None = None) -> dict:
+    """Stand up the DIMM-fleet timing-table service over a synthetic fleet:
+    ingest every DIMM, report the serving-path split, optionally checkpoint
+    the state, and return the ingest stats + staleness report."""
+    from repro.core.geometry import TINY
+    from repro.core.population import synthetic_fleet
+    from repro.serve import FleetConfig, FleetServer
+
+    fleet = synthetic_fleet(n_dimms, TINY, seed=0)
+    server = FleetServer(fleet, FleetConfig(chunk_size=chunk_size),
+                         checkpoint_dir=ckpt_dir)
+    t0 = time.perf_counter()
+    stats = server.ingest(now=0.0)
+    stats["ingest_s"] = round(time.perf_counter() - t0, 2)
+    stats.update(server.staleness())
+    if ckpt_dir is not None:
+        server.save(step=0)
+    print(f"fleet: {stats['ingested']} DIMMs in {stats['ingest_s']}s -> "
+          f"hits={stats['hits']} misses={stats['misses']} "
+          f"conventional={stats['conventional']} "
+          f"generations={stats['n_generations']}, staleness bound "
+          f"{stats['bound_years']:.2f}y"
+          + (f", checkpoint -> {ckpt_dir}" if ckpt_dir else ""))
+    return stats
 
 
 def main(argv=None) -> dict:
@@ -47,7 +80,16 @@ def main(argv=None) -> dict:
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="serve a DIMM fleet of this size instead of an LLM")
+    ap.add_argument("--chunk", type=int, default=128,
+                    help="fleet ingest chunk size (with --fleet)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (with --fleet)")
     args = ap.parse_args(argv)
+
+    if args.fleet:
+        return serve_fleet(args.fleet, args.chunk, args.ckpt_dir)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params = model_mod.init_params(jax.random.PRNGKey(0), cfg)

@@ -35,6 +35,15 @@ def test_diva_characterization_fast_path(capsys):
     assert "DivaProfiler(discovery=...)" in out
 
 
+def test_serve_demo_fast_path(capsys):
+    _load("serve_demo").main(fast=True)
+    out = capsys.readouterr().out
+    assert "fleet ingest:" in out and "hits=" in out
+    assert "query serial 7:" in out
+    assert "re-profiled" in out and "max staleness" in out
+    assert "checkpoint restart:" in out and "bit-identical=True" in out
+
+
 def test_fleet_stream_fast_path(capsys):
     _load("fleet_stream").main(fast=True)
     out = capsys.readouterr().out

@@ -27,6 +27,31 @@ def test_ramlite_import_warns_and_builds_no_traces():
     assert mod.N_TRACE_BUILDS == sim.N_TRACE_BUILDS
 
 
+def test_import_repro_core_is_warning_free():
+    """The facade is reached lazily through ``repro.core.__getattr__`` —
+    merely importing the package must NOT import ramlite (and so must not
+    emit its DeprecationWarning on every unrelated ``import repro.core``)."""
+    sys.modules.pop("repro.core", None)
+    sys.modules.pop("repro.core.ramlite", None)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        core = importlib.import_module("repro.core")
+    assert not [w for w in caught
+                if issubclass(w.category, DeprecationWarning)], \
+        "import repro.core must not trigger the ramlite deprecation"
+    assert "repro.core.ramlite" not in sys.modules, \
+        "import repro.core must not import the facade eagerly"
+    # the lazy attribute still resolves (and only NOW warns)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        ramlite = core.ramlite
+    assert [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    from repro.memsim import sim
+    assert ramlite.N_TRACES == sim.N_TRACES
+    with pytest.raises(AttributeError):
+        core.not_a_module
+
+
 def test_ramlite_facade_still_delegates():
     import repro.core.ramlite as ramlite
     from repro.memsim import sim
