@@ -14,7 +14,10 @@ the dense path's per-size re-lowering, and one batched N-axis
 ``operating_grid_arrays`` sweep vs the per-(DIMM, point) NumPy
 ``operating_point_eval`` loop; CI asserts all seven stay >= 5x on CPU with
 bit-identical results (decision-for-decision for the operating grid, whose
-lambdas are float32 reductions).
+lambdas are float32 reductions).  A ninth gate times the streamed chunk
+scan with the obs metrics registry enabled vs disabled
+(``obs_overhead_smoke``): tables must stay bit-identical, zero new chunk
+programs may lower, and the wall-time delta must stay under 2%.
 
     PYTHONPATH=src python benchmarks/kernel_bench.py --smoke
 
@@ -388,13 +391,22 @@ def stream_profile_speedup(n_sizes: int = 10, chunk_size: int = 8,
     sizes = (5, 6, 7, 9, 10, 11, 13, 14, 15, 17)[:n_sizes]
     fleets = [synthetic_fleet(n, TINY, seed=seed) for n in sizes]
 
+    # compile accounting comes from the obs registry (the runtime metric the
+    # one-compiled-program contract is now asserted on), cross-checked
+    # against the cache dict it absorbed
+    from repro import obs
+    compiles = lambda: int(obs.REGISTRY.value(
+        "repro_compile_programs_total", cache="chunk", entry="stream_profile"))
     jits_before = len(substrate._CHUNK_JIT_CACHE)
+    c_before = compiles()
     t0 = time.perf_counter()
     streamed = [stream_profile_population(f, chunk_size=chunk_size,
                                           collect=True)["tables"]
                 for f in fleets]
     t_stream = time.perf_counter() - t0
-    new_jits = len(substrate._CHUNK_JIT_CACHE) - jits_before
+    new_jits = compiles() - c_before
+    assert new_jits == len(substrate._CHUNK_JIT_CACHE) - jits_before, \
+        "registry compile count disagrees with the chunk cache"
 
     t0 = time.perf_counter()
     dense = [np.asarray(profile_population_arrays(f.materialize()))
@@ -409,6 +421,60 @@ def stream_profile_speedup(n_sizes: int = 10, chunk_size: int = 8,
             "speedup": round(t_dense / max(t_stream, 1e-9), 1),
             "chunk_programs_compiled": new_jits,
             "results_match": match}
+
+
+def obs_overhead_smoke(n_dimms: int = 24, chunk_size: int = 8,
+                       iters: int = 5) -> dict:
+    """The observability-cost gate: the streamed chunk scan timed with the
+    obs registry enabled vs disabled.
+
+    There is no uninstrumented build to compare against, so the gate bounds
+    what CAN differ: metrics enabled vs ``obs.disable()`` (every inc/observe
+    an early return).  Because instrumentation lives strictly at host
+    boundaries, the two runs must produce BIT-IDENTICAL tables, lower zero
+    new chunk programs, and differ in wall time by < 2% (with an absolute
+    floor — at smoke scale a scheduler hiccup is bigger than the handful of
+    counter bumps per chunk).  Best-of-``iters`` timing on both sides.
+    """
+    from repro import obs
+    from repro.core import substrate
+    from repro.core.geometry import TINY
+    from repro.core.population import synthetic_fleet
+    from repro.core.streaming import stream_profile_population
+
+    fleet = synthetic_fleet(n_dimms, TINY, seed=5)
+
+    def run():
+        return stream_profile_population(fleet, chunk_size=chunk_size,
+                                         collect=True)["tables"]
+
+    run()  # compile / warm the chunk program
+    jits_before = len(substrate._CHUNK_JIT_CACHE)
+
+    def best(f):
+        ts, out = [], None
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out = f()
+            ts.append(time.perf_counter() - t0)
+        return min(ts), out
+
+    t_on, tables_on = best(run)
+    obs.disable()
+    try:
+        t_off, tables_off = best(run)
+    finally:
+        obs.enable()
+
+    overhead = (t_on - t_off) / max(t_off, 1e-9)
+    return {"n_dimms": n_dimms, "chunk_size": chunk_size,
+            "enabled_ms": round(t_on * 1e3, 2),
+            "disabled_ms": round(t_off * 1e3, 2),
+            "overhead_frac": round(overhead, 4),
+            "abs_delta_ms": round((t_on - t_off) * 1e3, 2),
+            "new_chunk_programs":
+            len(substrate._CHUNK_JIT_CACHE) - jits_before,
+            "results_match": bool(np.array_equal(tables_on, tables_off))}
 
 
 def bench_streaming(n_dimms: int, chunk_size: int, budget_mb: int,
@@ -605,6 +671,21 @@ def main() -> None:
     print(f"OK: operating_grid_arrays {og['speedup']}x faster than the "
           f"per-(DIMM, point) loop on {og['n_dimms']} DIMMs x "
           f"{og['n_points']} operating points, matching decisions")
+    ob = obs_overhead_smoke()
+    for k, v in ob.items():
+        print(f"obs_overhead_{k},{v}")
+    if not ob["results_match"]:
+        sys.exit("FAIL: obs enabled vs disabled changed the streamed tables "
+                 "(instrumentation must be bitwise output-invariant)")
+    if ob["new_chunk_programs"] != 0:
+        sys.exit(f"FAIL: obs toggling lowered {ob['new_chunk_programs']} "
+                 "new chunk programs; instrumentation must add zero compiles")
+    if ob["overhead_frac"] >= 0.02 and ob["abs_delta_ms"] >= 2.0:
+        sys.exit(f"FAIL: obs overhead {ob['overhead_frac']*100:.2f}% "
+                 f"({ob['abs_delta_ms']}ms) over the disabled registry "
+                 "exceeds the 2% gate")
+    print(f"OK: obs overhead {ob['overhead_frac']*100:.2f}% on the streamed "
+          f"chunk scan, bit-identical tables, zero new compiles")
 
 
 if __name__ == "__main__":

@@ -6,8 +6,6 @@ numbers.
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.core.errors import DimmModel, expected_row_profile, vulnerability_ratio
@@ -20,12 +18,22 @@ from repro.core.profiling import (ALDRAM, conventional_profile, diva_profile,
                                   profiling_time_s)
 from repro.core.timing import STANDARD
 from repro.core import ramlite, shuffling, spice
+from repro import obs
+
+_FIG_WALL = obs.REGISTRY.histogram(
+    "repro_figure_wall_seconds", "wall time of one paper-figure benchmark",
+    labelnames=("figure",))
 
 
 def _timed(fn):
-    t0 = time.perf_counter()
-    out = fn()
-    return out, time.perf_counter() - t0
+    # every figure is timed through an obs span, so a traced bench run
+    # (--trace-out) shows one slice per figure and the registry keeps a
+    # per-figure wall-time histogram alongside the printed CSV
+    figure = fn.__qualname__.split(".")[0]
+    with obs.span("figure.run", hist=_FIG_WALL.labels(figure=figure),
+                  figure=figure) as sp:
+        out = fn()
+    return out, sp.duration_s
 
 
 def fig6_row_sweep():

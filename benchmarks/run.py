@@ -90,6 +90,55 @@ _BENCH_TRUE_KEYS: dict[str, tuple] = {
                          "prefix_parity"),
 }
 
+# The obs-registry block serve_bench.py embeds in new BENCH_serve.json
+# entries.  OPTIONAL per entry (trajectory entries predate the obs layer),
+# but when present it must be complete, well-typed, and self-declared
+# consistent — ``consistent`` is the bench's cross-check that the registry
+# agreed with every independently computed gate value.
+_METRICS_SCHEMA: dict[str, type | tuple] = {
+    "paths": dict, "hit_rate": (int, float), "queries": int,
+    "query_latency_p50_us": (int, float),
+    "query_latency_p99_us": (int, float),
+    "max_table_age_years": (int, float), "reprofiled": int,
+    "chunk_compiles": dict, "consistent": bool,
+}
+_METRICS_PATHS = frozenset({"hit", "discover", "conventional"})
+
+
+def validate_metrics_block(entry: dict, where: str) -> list[str]:
+    """Schema check for the optional ``metrics`` block of a serve entry."""
+    if "metrics" not in entry:
+        return []
+    met = entry["metrics"]
+    if not isinstance(met, dict):
+        return [f"{where}: metrics block is not a JSON object"]
+    errs = []
+    for key, typ in _METRICS_SCHEMA.items():
+        if key not in met:
+            errs.append(f"{where}: metrics block missing key {key!r}")
+        elif isinstance(met[key], bool) and typ is not bool:
+            errs.append(f"{where}: metrics.{key}={met[key]!r} must be "
+                        f"{typ}, got bool")
+        elif not isinstance(met[key], typ):
+            errs.append(f"{where}: metrics.{key}={met[key]!r} is not {typ}")
+    if errs:
+        return errs
+    if set(met["paths"]) != _METRICS_PATHS:
+        errs.append(f"{where}: metrics.paths keys {sorted(met['paths'])} != "
+                    f"{sorted(_METRICS_PATHS)}")
+    for block in ("paths", "chunk_compiles"):
+        for k, v in met[block].items():
+            if isinstance(v, bool) or not isinstance(v, int) or v < 0:
+                errs.append(f"{where}: metrics.{block}[{k!r}]={v!r} must be "
+                            "a nonnegative int")
+    if not 0.0 <= met["hit_rate"] <= 1.0:
+        errs.append(f"{where}: metrics.hit_rate={met['hit_rate']} "
+                    "outside [0, 1]")
+    if met["consistent"] is not True:
+        errs.append(f"{where}: metrics.consistent={met['consistent']!r} — "
+                    "only registry-consistent runs may be committed")
+    return errs
+
 
 def validate_bench_entry(entry, where: str, *,
                          extra_schema: dict | None = None,
@@ -148,10 +197,13 @@ def check_bench_files(bench_dir: Path) -> list[str]:
             errs.append(f"{path.name}: trajectory must be a non-empty list")
             continue
         for i, entry in enumerate(history):
+            where = f"{path.name}[{i}]"
             errs.extend(validate_bench_entry(
-                entry, f"{path.name}[{i}]",
+                entry, where,
                 extra_schema=_BENCH_FILE_SCHEMAS.get(path.name),
                 true_keys=_BENCH_TRUE_KEYS.get(path.name, ())))
+            if path.name == "BENCH_serve.json" and isinstance(entry, dict):
+                errs.extend(validate_metrics_block(entry, where))
     return errs
 
 

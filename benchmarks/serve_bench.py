@@ -15,7 +15,13 @@ serving contracts:
     table (region="worst") bit for bit, and every conventional-path table
     the every-row oracle (region="all");
   * checkpoint roundtrip — a save/load cycle into a fresh server must
-    reproduce tables, labels, and counters exactly.
+    reproduce tables, labels, and counters exactly;
+  * metrics consistency — ``FleetServer.metrics()`` (the obs-registry view)
+    must agree with every gate value this script computes independently:
+    path counts vs the ingest stats, query counter vs the throughput loop,
+    the staleness gauge vs ``staleness()``, the re-profile counter vs the
+    tick sum, and the registry's chunk-cache compile counts vs the actual
+    ``substrate._CHUNK_JIT_CACHE`` keys (one lowering per key).
 
 Appends the record to ``benchmarks/BENCH_serve.json`` and exits nonzero on
 any gate failure:
@@ -90,12 +96,19 @@ def _checkpoint_roundtrip(server) -> bool:
 
 
 def bench_serve(n_dimms: int, chunk_size: int, budget_mb: int,
-                min_qps: float, out_path: Path | None) -> dict:
+                min_qps: float, out_path: Path | None,
+                metrics_out: str | None = None,
+                trace_out: str | None = None) -> dict:
     import resource
 
+    from repro import obs
+    from repro.core import substrate
     from repro.core.geometry import TINY
     from repro.core.population import synthetic_fleet
     from repro.serve import FleetConfig, FleetServer
+
+    if trace_out:
+        obs.start_tracing()
 
     fleet = synthetic_fleet(n_dimms, TINY, seed=0)
     server = FleetServer(fleet, FleetConfig(chunk_size=chunk_size))
@@ -142,6 +155,28 @@ def bench_serve(n_dimms: int, chunk_size: int, budget_mb: int,
     # ---- checkpoint roundtrip through the ECC-protected manager
     ckpt_ok = _checkpoint_roundtrip(server)
 
+    # ---- metrics consistency: the obs-registry view of this server must
+    # match every number computed independently above, and the registry's
+    # chunk-compile accounting must match the actual cache (one lowering
+    # per (entry, statics, donate) key — the one-compiled-program contract)
+    met = server.metrics()
+    cache_counts: dict[str, int] = {}
+    for k in substrate._CHUNK_JIT_CACHE:
+        cache_counts[k[0]] = cache_counts.get(k[0], 0) + 1
+    checks = {
+        "paths": met["paths"] == {"hit": int(ingest["hits"]),
+                                  "discover": int(ingest["misses"]),
+                                  "conventional": int(ingest["conventional"])},
+        "queries": met["queries"] == n_queries,
+        "staleness_gauge": met["max_table_age_years"]
+        == server.staleness()["max_staleness_years"],
+        "reprofiled": met["reprofiled"]
+        == sum(t["reprofiled"] for t in ticks),
+        "compiles": met["chunk_compiles"] == cache_counts,
+        "latency_count": met["query_latency_seconds"]["count"] > 0,
+    }
+    metrics_ok = all(checks.values())
+
     peak_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
     entry = {
         "date": time.strftime("%Y-%m-%d"),
@@ -167,6 +202,21 @@ def bench_serve(n_dimms: int, chunk_size: int, budget_mb: int,
         "budget_mb": int(budget_mb),
         "peak_rss_mb": round(peak_mb, 1),
         "prefix_parity": bool(parity["parity"]),
+        "metrics": {
+            "paths": {k: int(v) for k, v in met["paths"].items()},
+            "hit_rate": round(float(met["hit_rate"]), 4),
+            "queries": int(met["queries"]),
+            "query_latency_p50_us": round(
+                met["query_latency_seconds"]["p50"] * 1e6, 1),
+            "query_latency_p99_us": round(
+                met["query_latency_seconds"]["p99"] * 1e6, 1),
+            "max_table_age_years": round(
+                float(met["max_table_age_years"]), 3),
+            "reprofiled": int(met["reprofiled"]),
+            "chunk_compiles": {k: int(v)
+                               for k, v in met["chunk_compiles"].items()},
+            "consistent": bool(metrics_ok),
+        },
     }
     if out_path is not None:
         history = []
@@ -187,9 +237,20 @@ def bench_serve(n_dimms: int, chunk_size: int, budget_mb: int,
         failures.append(f"throughput {qps:.0f} queries/s < {min_qps:.0f}/s")
     if not ckpt_ok:
         failures.append("checkpoint roundtrip altered serving state")
+    if not metrics_ok:
+        bad = sorted(k for k, v in checks.items() if not v)
+        failures.append("FleetServer.metrics() disagrees with the "
+                        f"independently computed gate values: {bad}")
     if peak_mb > budget_mb:
         failures.append(f"peak RSS {peak_mb:.0f} MB exceeds the "
                         f"{budget_mb} MB budget")
+    if trace_out:
+        obs.stop_tracing()
+        print(f"trace  -> {obs.write_chrome_trace(trace_out)}")
+    if metrics_out:
+        with open(metrics_out, "w") as f:
+            f.write(obs.REGISTRY.prometheus_text())
+        print(f"metrics -> {metrics_out}")
     if failures:
         sys.exit("FAIL: " + "; ".join(failures))
     print(f"OK: {n_dimms}-DIMM fleet served at {qps:.0f} queries/s "
@@ -210,12 +271,18 @@ def main() -> None:
     ap.add_argument("--min-qps", type=float, default=1000.0)
     ap.add_argument("--out", default=str(Path(__file__).parent
                                          / "BENCH_serve.json"))
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the obs registry as Prometheus text here")
+    ap.add_argument("--trace-out", default=None,
+                    help="record spans; write Chrome trace-event JSON here")
     args = ap.parse_args()
     if args.smoke:
-        bench_serve(256, 128, args.budget_mb, args.min_qps, out_path=None)
+        bench_serve(256, 128, args.budget_mb, args.min_qps, out_path=None,
+                    metrics_out=args.metrics_out, trace_out=args.trace_out)
         return
     bench_serve(args.fleet, args.chunk, args.budget_mb, args.min_qps,
-                Path(args.out))
+                Path(args.out), metrics_out=args.metrics_out,
+                trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

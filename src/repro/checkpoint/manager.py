@@ -18,6 +18,24 @@ import jax
 import numpy as np
 
 from repro.memsys import codec
+from repro.obs import REGISTRY as _OBS_REGISTRY
+from repro.obs import span as _span
+
+# Checkpoint observability (ARCHITECTURE 3h): counters + duration histograms
+# at the save/restore boundaries (pure host I/O — nothing here touches a
+# traced program), including the scrubbing signal: corrected codewords per
+# restore, the early-warning counter for decaying checkpoint media.
+_M_SAVES = _OBS_REGISTRY.counter(
+    "repro_checkpoint_saves_total", "checkpoint steps written")
+_M_RESTORES = _OBS_REGISTRY.counter(
+    "repro_checkpoint_restores_total", "checkpoint steps restored")
+_M_CORRECTED = _OBS_REGISTRY.counter(
+    "repro_checkpoint_corrected_codewords_total",
+    "SECDED-corrected codewords across restores (scrubbing signal)")
+_M_SAVE_S = _OBS_REGISTRY.histogram(
+    "repro_checkpoint_save_seconds", "checkpoint save wall time")
+_M_RESTORE_S = _OBS_REGISTRY.histogram(
+    "repro_checkpoint_restore_seconds", "checkpoint restore wall time")
 
 
 def _tree_paths(tree):
@@ -46,6 +64,12 @@ class CheckpointManager:
     # ----------------------------------------------------------------- save
 
     def save(self, step: int, state) -> Path:
+        with _span("checkpoint.save", _M_SAVE_S, step=step):
+            out = self._save(step, state)
+        _M_SAVES.inc()
+        return out
+
+    def _save(self, step: int, state) -> Path:
         flat, treedef = _tree_paths(state)
         tmp = self.dir / f".tmp_step_{step}"
         if tmp.exists():
@@ -97,6 +121,16 @@ class CheckpointManager:
         """Restore into the structure of ``example_state``. ``shardings``
         (optional pytree of NamedSharding) re-shards onto the current mesh —
         this is how a checkpoint from a 512-chip mesh lands on 256 chips."""
+        with _span("checkpoint.restore", _M_RESTORE_S) as sp:
+            state, info = self._restore(example_state, step,
+                                        shardings=shardings, verify=verify)
+            sp.set(step=info["step"])
+        _M_RESTORES.inc()
+        _M_CORRECTED.inc(info["corrected_codewords"])
+        return state, info
+
+    def _restore(self, example_state, step: int | None = None, *,
+                 shardings=None, verify: bool = True):
         steps = self.steps()
         if not steps:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")

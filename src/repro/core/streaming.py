@@ -58,6 +58,8 @@ from repro.core.substrate import (DimmBatch, _LEAVES, _axis_context,
                                   condition_adders, lifetime_adders,
                                   operating_grid_tables, pattern_stress)
 from repro.core.timing import PARAMS, VDD_STD
+from repro.obs import REGISTRY as _OBS_REGISTRY
+from repro.obs import tracing as _obs_tracing
 from repro.sharding import chunk_spans
 
 # chunk outputs rarely share a (shape, dtype) with the donated chunk leaves;
@@ -65,6 +67,19 @@ from repro.sharding import chunk_spans
 # expected here — donation is for releasing chunk inputs early, not aliasing
 warnings.filterwarnings(
     "ignore", message="Some donated buffers were not usable")
+
+
+# Streaming throughput accounting (obs layer, ARCHITECTURE 3h).  Chunk
+# dispatches and folded DIMMs are counted at the HOST chunk boundary — the
+# clock the DIMMs/s ROADMAP gate ticks against.  Per-chunk spans are guarded
+# on ``tracing.active()`` so an idle tracer costs the hot loop nothing.
+_OBS_CHUNKS = _OBS_REGISTRY.counter(
+    "repro_stream_chunks_total",
+    "chunk programs dispatched by the streaming driver, by entry point",
+    labelnames=("entry",))
+_OBS_DIMMS = _OBS_REGISTRY.counter(
+    "repro_stream_dimms_total",
+    "DIMMs folded through streaming scans (clone-padding excluded)")
 
 
 # ------------------------------------------------------------- the stream
@@ -302,6 +317,7 @@ def stream_population(source, program, reducers: dict, *,
         batch = stream.chunk(lo, hi)
         keep = np.arange(full) < (hi - lo)
         out = program(pad_batch(batch, full - (hi - lo)), keep, lo)
+        _OBS_DIMMS.inc(hi - lo)
         serials = np.asarray(batch.serial)
         for name, red in reducers.items():
             value = np.asarray(out[name])
@@ -317,7 +333,20 @@ def _chunk_call(name: str, impl, args, statics: dict, donate: tuple,
                 batch_argnums: tuple, mesh):
     """One chunk dispatch: the donated cached jit, or the sharded route when
     a mesh is given (shard_map has its own program cache; donation does not
-    compose with it and is skipped)."""
+    compose with it and is skipped).  Also the streaming layer's one
+    instrumentation point: a chunk counter always, a "stream.chunk" span
+    only while a trace is recording (the ``active()`` guard keeps the hot
+    loop at one branch otherwise)."""
+    _OBS_CHUNKS.labels(entry=name).inc()
+    if _obs_tracing.active():
+        with _obs_tracing.span("stream.chunk", entry=name) as sp:
+            if mesh is None:
+                out = _chunk_jitted(name, impl, statics, donate)(*args)
+            else:
+                out = _run_sharded(name, mesh, impl, args, statics,
+                                   batch_argnums)
+            sp.bind(out)
+        return out
     if mesh is None:
         return _chunk_jitted(name, impl, statics, donate)(*args)
     return _run_sharded(name, mesh, impl, args, statics, batch_argnums)
@@ -508,6 +537,7 @@ def stream_shuffling_gain(probs_source, n_dimms: int | None = None, *,
             "stream_shuffling", _shuffling_impl,
             (jnp.asarray(_pad0(chunk, pad)), jnp.asarray(_pad0(seeds, pad))),
             statics, donate=(0, 1), batch_argnums=(0, 1), mesh=mesh)
+        _OBS_DIMMS.inc(hi - lo)
         for k, arr in zip(keys, out):
             v = np.asarray(arr, np.int64)[:hi - lo]
             red[f"{k}_sum"].update(v, seeds)
@@ -646,6 +676,8 @@ def stream_error_summary(source, param: str, t_op: float, *,
                                   adder, chip, subarray)
         args = (jnp.asarray(batch.row_src[:, subarray]), d_mat, coeffs,
                 jnp.asarray(keep))
+        # hand-rolled dispatch (mixed out-specs) — count the chunk here
+        _OBS_CHUNKS.labels(entry="stream_error_summary").inc()
         if mesh is None:
             out = _chunk_jitted("stream_error_summary", _error_summary_impl,
                                 statics, donate=(0, 2))(*args)
@@ -834,6 +866,7 @@ def stream_discover_generations(source, *, counts_fn=None, param: str = "trp",
         sigs = bit_signature_population(counts.astype(np.int32), mesh=mesh)
         feats = signature_features(sigs)
         labels = gens.update(feats, counts)
+        _OBS_DIMMS.inc(hi - lo)
         if collect_labels:
             labels_parts.append(labels)
             serial_parts.append(np.asarray(batch.serial))

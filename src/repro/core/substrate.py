@@ -55,6 +55,7 @@ from repro.core.latency import (DEFAULT_ITERS, DEFAULT_PATTERNS,
 from repro.core.timing import (AXES, CYCLE_NS, OP_GRID_LANE, PARAMS, STANDARD,
                                VDD_STD, OperatingPoint, TimingParams,
                                op_point_key)
+from repro.obs import REGISTRY as _OBS_REGISTRY
 
 if TYPE_CHECKING:  # avoid an import cycle: errors.py imports query_uniform
     from repro.core.errors import DimmModel
@@ -678,11 +679,14 @@ def _run_sharded(name: str, mesh, impl, args, statics: dict,
            batch_argnums)
     prog = _SHARD_CACHE.get(key)
     if prog is None:
+        _OBS_COMPILES.labels(cache="shard", entry=name).inc()
         in_specs = tuple(P(axis) if i in batch_argnums else P()
                          for i in range(len(args)))
         fn = functools.partial(impl, **statics)
         prog = _SHARD_CACHE[key] = jax.jit(
             shard_map(fn, mesh, in_specs=in_specs, out_specs=P(axis)))
+    else:
+        _OBS_REUSES.labels(cache="shard", entry=name).inc()
     out = prog(*args)
     return jax.tree.map(lambda a: a[:D], out)
 
@@ -695,6 +699,20 @@ def _dispatch(name: str, mesh, impl, jitted, args, statics: dict,
         return jitted(*args, **statics)
     return _run_sharded(name, mesh, impl, args, statics, batch_argnums)
 
+
+# Compile-cache accounting (obs layer, ARCHITECTURE 3h): every program
+# lowering and every cache reuse is counted by (cache, entry point), turning
+# the one-compiled-program contract into a runtime metric — the streaming
+# bench gate reads these counters instead of poking the cache dicts.
+# Increments happen on the HOST at cache-decision time, never in traced code.
+_OBS_COMPILES = _OBS_REGISTRY.counter(
+    "repro_compile_programs_total",
+    "XLA program lowerings by (cache, entry point)",
+    labelnames=("cache", "entry"))
+_OBS_REUSES = _OBS_REGISTRY.counter(
+    "repro_compile_reuse_total",
+    "compiled-program cache hits by (cache, entry point)",
+    labelnames=("cache", "entry"))
 
 _CHUNK_JIT_CACHE: dict = {}
 
@@ -715,8 +733,11 @@ def _chunk_jitted(name: str, impl, statics: dict, donate: tuple):
     key = (name, tuple(sorted(statics.items())), donate)
     prog = _CHUNK_JIT_CACHE.get(key)
     if prog is None:
+        _OBS_COMPILES.labels(cache="chunk", entry=name).inc()
         prog = _CHUNK_JIT_CACHE[key] = jax.jit(
             functools.partial(impl, **statics), donate_argnums=donate)
+    else:
+        _OBS_REUSES.labels(cache="chunk", entry=name).inc()
     return prog
 
 

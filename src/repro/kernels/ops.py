@@ -22,6 +22,24 @@ from repro.kernels.secded import encode_checks as _enc_pallas
 from repro.kernels.secded import syndrome as _syn_pallas
 from repro.kernels.shuffle import apply_shuffle as _shuf_pallas
 from repro.kernels.wkv6 import wkv6 as _wkv6_pallas
+from repro.obs import REGISTRY as _OBS_REGISTRY
+
+# Kernel dispatch accounting (obs layer, ARCHITECTURE 3h).  The Python in
+# these wrappers only runs while JAX is TRACING (jit/vmap callers replay the
+# compiled program without re-entering it), so this counter counts kernel
+# TRACES — i.e. lowerings through each dispatch site — not executions.  That
+# makes it inherently host-side (zero effect on compiled graphs) and exactly
+# the compile-accounting signal the bench gates watch.
+_KERNEL_TRACES = _OBS_REGISTRY.counter(
+    "repro_kernel_traces_total",
+    "kernel dispatch traces by (kernel, backend); counts lowerings, "
+    "not executions",
+    labelnames=("kernel", "backend"))
+
+
+def _count(kernel: str, pallas: bool) -> None:
+    _KERNEL_TRACES.labels(kernel=kernel,
+                          backend="pallas" if pallas else "ref").inc()
 
 
 def use_pallas() -> bool:
@@ -33,13 +51,17 @@ def interpret_mode() -> bool:
 
 
 def secded_encode(data_bits):
-    if not use_pallas():
+    p = use_pallas()
+    _count("secded_encode", p)
+    if not p:
         return _ref.secded_encode(data_bits)
     return _enc_pallas(data_bits, interpret=interpret_mode())
 
 
 def secded_syndrome(code_bits, tile: int | None = None):
-    if not use_pallas():
+    p = use_pallas()
+    _count("secded_syndrome", p)
+    if not p:
         return _ref.secded_syndrome(code_bits)
     kw = {} if tile is None else {"tile": tile}
     return _syn_pallas(code_bits, interpret=interpret_mode(), **kw)
@@ -52,6 +74,7 @@ def fail_prob(row_src, d_mat, coeffs, *, cols: int, open_bitline: bool = True,
     their cache (the ``substrate._shuffling_jit`` convention)."""
     if pallas is None:
         pallas = use_pallas()
+    _count("fail_prob", pallas)
     if not pallas:
         return _ref.fail_prob(row_src, d_mat, coeffs, cols=cols,
                               open_bitline=open_bitline)
@@ -82,6 +105,7 @@ def fail_prob_op(row_src, d_mat, coeffs, *, cols: int,
     convention."""
     if pallas is None:
         pallas = use_pallas()
+    _count("fail_prob_op", pallas)
     if not pallas:
         return _ref.fail_prob_op(row_src, d_mat, coeffs, cols=cols,
                                  open_bitline=open_bitline, voltage=voltage,
@@ -111,6 +135,7 @@ def bit_signature(counts, *, nbits: int, tile: int | None = None,
     per the ``fail_prob`` convention."""
     if pallas is None:
         pallas = use_pallas()
+    _count("bit_signature", pallas)
     if not pallas:
         return _ref.bit_signature(counts, nbits)
     kw = {} if tile is None else {"tile": tile}
@@ -125,6 +150,7 @@ def bank_sched(*args, pallas: bool | None = None, **kw):
     ``fail_prob`` convention."""
     if pallas is None:
         pallas = use_pallas()
+    _count("bank_sched", pallas)
     if not pallas:
         return _ref.bank_sched(*args, **kw)
     return _sched_pallas(*args, interpret=interpret_mode(), **kw)
@@ -132,7 +158,9 @@ def bank_sched(*args, pallas: bool | None = None, **kw):
 
 def diva_shuffle(bursts, inverse: bool = False, shuffle: bool = True,
                  perm=None, tile: int | None = None):
-    if not use_pallas():
+    p = use_pallas()
+    _count("diva_shuffle", p)
+    if not p:
         return _ref.diva_shuffle(bursts, inverse, shuffle=shuffle, perm=perm)
     kw = {} if tile is None else {"tile": tile}
     return _shuf_pallas(bursts, inverse=inverse, shuffle=shuffle, perm=perm,
@@ -140,12 +168,16 @@ def diva_shuffle(bursts, inverse: bool = False, shuffle: bool = True,
 
 
 def rc_transient(row_frac, col_frac, **kw):
-    if not use_pallas():
+    p = use_pallas()
+    _count("rc_transient", p)
+    if not p:
         return _ref.rc_transient(row_frac, col_frac, **kw)
     return _rc_pallas(row_frac, col_frac, interpret=interpret_mode(), **kw)
 
 
 def wkv6(r, k, v, wlog, u):
-    if not use_pallas():
+    p = use_pallas()
+    _count("wkv6", p)
+    if not p:
         return _ref.wkv6(r, k, v, wlog, u)
     return _wkv6_pallas(r, k, v, wlog, u, interpret=interpret_mode())

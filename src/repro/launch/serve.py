@@ -3,16 +3,20 @@ the DIMM-fleet timing-table service (``repro.serve.FleetServer``).
 
 ``python -m repro.launch.serve --arch qwen2-0.5b --smoke --tokens 16``
 ``python -m repro.launch.serve --fleet 256 --chunk 128 [--ckpt-dir D]``
+
+``--metrics-out F`` dumps the obs registry (Prometheus text) and
+``--trace-out F`` records the run as Chrome trace-event JSON — the two
+observability artifacts CI uploads per leg.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
 from repro.data.pipeline import make_batch
 from repro.launch import steps as steps_mod
@@ -21,27 +25,30 @@ from repro.models import model as model_mod
 
 
 def generate(cfg, params, prompt_batch, *, max_new: int = 16):
-    """Returns (generated tokens (B, max_new), stats)."""
+    """Returns (generated tokens (B, max_new), stats).  Wall times come from
+    ``obs`` spans — one code path for the driver's printed stats, the bench
+    numbers, and the trace-event timeline.  ``Span.bind`` blocks on the
+    bound device value at span close, so a span measures compute, not
+    dispatch (jitted calls return asynchronously), on the monotonic clock.
+    """
     B, S = prompt_batch["tokens"].shape
     prefill = steps_mod.make_prefill_step(cfg, max_seq=S + max_new)
     decode = steps_mod.make_decode_step(cfg)
     jpre = jax.jit(prefill)
     jdec = jax.jit(decode)
-    # jitted calls dispatch asynchronously: without block_until_ready the
-    # stopwatch measures dispatch, not compute — and wall times must come
-    # from the monotonic clock, never time.time()
-    t0 = time.perf_counter()
-    logits, cache = jpre(params, prompt_batch)
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-    jax.block_until_ready(tok)
-    t_prefill = time.perf_counter() - t0
-    out = [tok]
-    t0 = time.perf_counter()
-    for _ in range(max_new - 1):
-        tok, cache = jdec(params, cache, {"tokens": tok[:, None]})
-        out.append(tok)
-    toks = jax.block_until_ready(jnp.stack(out, axis=1))
-    t_decode = time.perf_counter() - t0
+    with obs.span("serve.prefill", batch=B, prompt_len=S) as sp:
+        logits, cache = jpre(params, prompt_batch)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        sp.bind(tok)
+    t_prefill = sp.duration_s
+    with obs.span("serve.decode", batch=B, tokens=max_new) as sp:
+        out = [tok]
+        for _ in range(max_new - 1):
+            tok, cache = jdec(params, cache, {"tokens": tok[:, None]})
+            out.append(tok)
+        toks = jnp.stack(out, axis=1)
+        sp.bind(toks)
+    t_decode = sp.duration_s
     return toks, {"prefill_s": t_prefill, "decode_s": t_decode,
                   "tok_per_s": B * (max_new - 1) / max(t_decode, 1e-9)}
 
@@ -58,10 +65,11 @@ def serve_fleet(n_dimms: int, chunk_size: int,
     fleet = synthetic_fleet(n_dimms, TINY, seed=0)
     server = FleetServer(fleet, FleetConfig(chunk_size=chunk_size),
                          checkpoint_dir=ckpt_dir)
-    t0 = time.perf_counter()
-    stats = server.ingest(now=0.0)
-    stats["ingest_s"] = round(time.perf_counter() - t0, 2)
+    with obs.span("serve.fleet_ingest", n_dimms=n_dimms) as sp:
+        stats = server.ingest(now=0.0)
+    stats["ingest_s"] = round(sp.duration_s, 2)
     stats.update(server.staleness())
+    stats["metrics"] = server.metrics()
     if ckpt_dir is not None:
         server.save(step=0)
     print(f"fleet: {stats['ingested']} DIMMs in {stats['ingest_s']}s -> "
@@ -86,21 +94,41 @@ def main(argv=None) -> dict:
                     help="fleet ingest chunk size (with --fleet)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="checkpoint directory (with --fleet)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the obs registry as Prometheus text here")
+    ap.add_argument("--trace-out", default=None,
+                    help="record spans; write Chrome trace-event JSON here")
     args = ap.parse_args(argv)
 
-    if args.fleet:
-        return serve_fleet(args.fleet, args.chunk, args.ckpt_dir)
+    if args.trace_out:
+        obs.start_tracing()
+    try:
+        if args.fleet:
+            stats = serve_fleet(args.fleet, args.chunk, args.ckpt_dir)
+        else:
+            cfg = get_smoke_config(args.arch) if args.smoke \
+                else get_config(args.arch)
+            params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
+            batch = make_batch(cfg, args.batch, args.prompt_len,
+                               seed=0, step=0)
+            batch["tokens"] = batch["tokens"][:, :-1]
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    params = model_mod.init_params(jax.random.PRNGKey(0), cfg)
-    batch = make_batch(cfg, args.batch, args.prompt_len, seed=0, step=0)
-    batch["tokens"] = batch["tokens"][:, :-1]
-
-    with make_host_mesh():
-        toks, stats = generate(cfg, params, batch, max_new=args.tokens)
-    print(f"{args.arch}: generated {toks.shape} prefill={stats['prefill_s']:.2f}s "
-          f"decode={stats['decode_s']:.2f}s ({stats['tok_per_s']:.1f} tok/s)")
-    assert np.isfinite(np.asarray(toks)).all()
+            with make_host_mesh():
+                toks, stats = generate(cfg, params, batch,
+                                       max_new=args.tokens)
+            print(f"{args.arch}: generated {toks.shape} "
+                  f"prefill={stats['prefill_s']:.2f}s "
+                  f"decode={stats['decode_s']:.2f}s "
+                  f"({stats['tok_per_s']:.1f} tok/s)")
+            assert np.isfinite(np.asarray(toks)).all()
+    finally:
+        if args.trace_out:
+            obs.stop_tracing()
+            print(f"trace  -> {obs.write_chrome_trace(args.trace_out)}")
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                f.write(obs.REGISTRY.prometheus_text())
+            print(f"metrics -> {args.metrics_out}")
     return stats
 
 

@@ -46,6 +46,7 @@ from repro.core.substrate import _dispatch, mix_uniform, trace_uniform
 from repro.core.timing import (CYCLE_NS, PARAMS, STANDARD, TBL_CYCLES,
                                TCL_NS, TCWL_NS, TFAW_CYCLES, TRRD_CYCLES,
                                TimingParams)
+from repro.obs import REGISTRY as _OBS_REGISTRY
 
 CPU_GHZ = 3.2  # Table 1
 
@@ -227,10 +228,26 @@ def timing_cycles_banks(timing, banks: int) -> np.ndarray:
 
 # Bumped once per trace of the jitted simulators; the no-retrace contract
 # (sweeping TimingParams VALUES reuses the compiled program) is asserted on
-# this counter in tests.  N_TRACE_BUILDS counts host-side trace-stack builds
-# (the `_stack_traces` cache regression).
-N_TRACES = 0
-N_TRACE_BUILDS = 0
+# these counters in tests.  They live on the obs registry now (the bumps
+# happen inside jitted bodies, i.e. at TRACE time — Python there is host-side
+# by construction); the module ``__getattr__`` below keeps the historical
+# ``N_TRACES`` / ``N_TRACE_BUILDS`` ints readable, and the ``core.ramlite``
+# facade's own ``__getattr__`` chains straight through to it.
+_TRACES = _OBS_REGISTRY.counter(
+    "repro_memsim_traces_total",
+    "traces of the jitted memsim grid simulators (the no-retrace contract)")
+_TRACE_BUILDS = _OBS_REGISTRY.counter(
+    "repro_memsim_trace_builds_total",
+    "host-side trace-stack builds (the _stack_traces cache regression)")
+
+_COMPAT_COUNTERS = {"N_TRACES": _TRACES, "N_TRACE_BUILDS": _TRACE_BUILDS}
+
+
+def __getattr__(name: str) -> int:
+    counter = _COMPAT_COUNTERS.get(name)
+    if counter is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return int(counter.value())
 
 # Hard bound on the (n_requests, banks, seed) -> stacked-trace cache: each
 # entry holds W device-resident trace arrays, so an UNBOUNDED cache grows
@@ -243,8 +260,7 @@ TRACE_CACHE_MAX = 16
 
 @functools.lru_cache(maxsize=TRACE_CACHE_MAX)
 def _stack_traces_cached(n_requests: int, banks: int, seed: int) -> dict:
-    global N_TRACE_BUILDS
-    N_TRACE_BUILDS += 1
+    _TRACE_BUILDS.inc()
     trs = [make_trace(w, n_requests, banks, seed + i)
            for i, w in enumerate(WORKLOADS)]
     return {k: jnp.asarray(np.stack([tr[k] for tr in trs])) for k in trs[0]}
@@ -302,8 +318,7 @@ def _sim_grid(traces, timings, *, banks: int):
     """traces: dict of (W, n) int32; timings: (T, 6) int32 cycle rows.
     Returns dict of (T, W) metrics — the whole workload x timing grid as one
     device call (the retained in-order walker)."""
-    global N_TRACES
-    N_TRACES += 1
+    _TRACES.inc()
     per_t = jax.vmap(lambda tr, tc: _sim_one(tr, tc, banks), in_axes=(0, None))
     return jax.vmap(per_t, in_axes=(None, 0))(traces, timings)
 
@@ -491,8 +506,7 @@ def _memsim_grid(traces, tc_tables, *, cfg: MemSimConfig, pallas: bool):
     rows.  The whole (timing tables x workloads) simulation grid as one
     device program; returns dict of (T, W) metrics (exact integer totals +
     the deterministic f32 reductions)."""
-    global N_TRACES
-    N_TRACES += 1
+    _TRACES.inc()
     one = lambda tr, tc: _reduce_metrics(
         *_scan_sim(tr, tc, cfg=cfg, pallas=pallas), xp=jnp)
     per_t = jax.vmap(one, in_axes=(0, None))

@@ -1,0 +1,50 @@
+"""Fleet observability: metrics registry + span tracing (ARCHITECTURE 3h).
+
+One process-global ``REGISTRY`` of counters/gauges/histograms and a span
+tracer emitting Chrome trace-event JSON, threaded through every hot layer —
+substrate compile caches, kernel dispatch, streaming chunk scans, the
+FleetServer serving paths, checkpointing, and the launch drivers.
+
+The load-bearing rule: **instrumentation lives strictly at host
+boundaries** — a counter bumps when Python runs (trace time, cache miss,
+chunk boundary), a span wraps a host call — never inside jitted/scanned
+code.  Consequently enabling or disabling observability is bitwise
+output-invariant and adds zero compiles (asserted in tests/test_obs.py),
+and disabled mode costs one branch per event.
+
+    from repro import obs
+    obs.REGISTRY.counter("repro_my_events_total").inc()
+    with obs.span("layer.section") as sp:
+        ...
+    print(obs.REGISTRY.prometheus_text())
+
+``obs.disable()`` / ``obs.enable()`` flip the metrics registry;
+``obs.start_tracing()`` / ``obs.stop_tracing()`` scope a trace recording.
+"""
+from repro.obs.metrics import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
+                               Metric, REGISTRY, Registry)
+from repro.obs.tracing import (Span, active, chrome_trace, span,
+                               start_tracing, stop_tracing, trace_events,
+                               write_chrome_trace)
+
+
+def enable() -> None:
+    REGISTRY.enabled = True
+
+
+def disable() -> None:
+    """Freeze every metric (reads still work, events become one branch).
+    Tracing is separately scoped by ``start_tracing``/``stop_tracing``."""
+    REGISTRY.enabled = False
+
+
+def enabled() -> bool:
+    return REGISTRY.enabled
+
+
+__all__ = [
+    "DEFAULT_BUCKETS", "Counter", "Gauge", "Histogram", "Metric",
+    "REGISTRY", "Registry", "Span", "active", "chrome_trace", "disable",
+    "enable", "enabled", "span", "start_tracing", "stop_tracing",
+    "trace_events", "write_chrome_trace",
+]

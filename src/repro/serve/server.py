@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import itertools
 from dataclasses import dataclass
 
 import jax.numpy as jnp
@@ -53,8 +54,37 @@ from repro.discovery.recover import (mapping_tables,
                                      recover_mapping_population, vote_mapping)
 from repro.discovery.signatures import (bit_signature_population,
                                         signature_features)
+from repro.obs import REGISTRY as _OBS_REGISTRY
+from repro.obs import span as _span
 from repro.serve.state import (PATH_CONVENTIONAL, PATH_DISCOVER, PATH_HIT,
                                FleetState, GenerationCache)
+
+# Serving-layer metrics (obs layer, ARCHITECTURE 3h).  Every series is
+# labeled with a process-unique server id so several FleetServers in one
+# process (tests, checkpoint roundtrips) never mix counts; each server holds
+# its bound children — no label resolution on the serving path.
+_SERVER_IDS = itertools.count()
+_PATH_NAMES = {PATH_HIT: "hit", PATH_DISCOVER: "discover",
+               PATH_CONVENTIONAL: "conventional"}
+_M_INGEST = _OBS_REGISTRY.counter(
+    "repro_serve_ingest_total", "DIMMs ingested by serving path",
+    labelnames=("server", "path"))
+_M_QUERIES = _OBS_REGISTRY.counter(
+    "repro_serve_queries_total", "timing-table queries served",
+    labelnames=("server",))
+_M_QLAT = _OBS_REGISTRY.histogram(
+    "repro_serve_query_latency_seconds", "table query latency",
+    labelnames=("server",))
+_M_AGE = _OBS_REGISTRY.gauge(
+    "repro_serve_max_table_age_years",
+    "worst served-table age at the last staleness() call",
+    labelnames=("server",))
+_M_GENS = _OBS_REGISTRY.gauge(
+    "repro_serve_generations", "generations in the signature cache",
+    labelnames=("server",))
+_M_REPROF = _OBS_REGISTRY.counter(
+    "repro_serve_reprofiled_total", "DIMMs re-profiled by tick()",
+    labelnames=("server",))
 
 
 def take_batch(batch, idx):
@@ -134,6 +164,14 @@ class FleetServer:
                              multibit=config.multibit_only, banks=1,
                              axes=PARAMS, retention=False)
         self._nbits = int(np.log2(g.rows_per_mat))
+        self._sid = str(next(_SERVER_IDS))
+        self._m_path = {name: _M_INGEST.labels(server=self._sid, path=name)
+                        for name in _PATH_NAMES.values()}
+        self._m_queries = _M_QUERIES.labels(server=self._sid)
+        self._m_qlat = _M_QLAT.labels(server=self._sid)
+        self._m_age = _M_AGE.labels(server=self._sid)
+        self._m_gens = _M_GENS.labels(server=self._sid)
+        self._m_reprof = _M_REPROF.labels(server=self._sid)
 
     # ------------------------------------------------------------- ingest
 
@@ -148,7 +186,8 @@ class FleetServer:
         before = (self.cache.hits, self.cache.misses, self.cache.conventional)
         for lo in range(lo0, hi0, self._full):
             hi = min(lo + self._full, hi0)
-            self._ingest_chunk(self.stream.chunk(lo, hi), now)
+            with _span("serve.ingest_chunk", server=self._sid, lo=lo, hi=hi):
+                self._ingest_chunk(self.stream.chunk(lo, hi), now)
             self._ingested = hi
         self.clock = max(self.clock, now)
         return {"ingested": hi0 - lo0,
@@ -203,7 +242,10 @@ class FleetServer:
         new_gens = sorted({int(l) for l in labels
                            if l >= 0 and not self.cache.known(l)})
         if new_gens:
-            self._discover(batch, counts_t, onset, labels, new_gens, genuine)
+            with _span("serve.discover", server=self._sid,
+                       n_generations=len(new_gens)):
+                self._discover(batch, counts_t, onset, labels, new_gens,
+                               genuine)
         ver = np.asarray([l >= 0 and self.cache.verified(int(l))
                           for l in labels])
         path = np.where(~ver, PATH_CONVENTIONAL,
@@ -213,6 +255,9 @@ class FleetServer:
         self.cache.hits += int((path == PATH_HIT).sum())
         self.cache.misses += int((path == PATH_DISCOVER).sum())
         self.cache.conventional += int(conv.sum())
+        for code, name in _PATH_NAMES.items():
+            self._m_path[name].inc(int((path == code).sum()))
+        self._m_gens.set(self.cache.n_generations)
 
         # one restricted sweep for every DIMM with a verified region (hit +
         # fresh discoveries); conventional DIMMs take the every-row sweep
@@ -327,9 +372,12 @@ class FleetServer:
         padded = pad_batch(batch, pad)
         rows = _pad0(np.asarray(internal_rows, np.int32), pad)
         adder = self._adder(padded, now)
-        out = _chunk_jitted("serve_profile", _profile_impl, self._statics,
-                            donate=(0, 3))(padded, jnp.asarray(rows),
-                                           self._stress, jnp.asarray(adder))
+        with _span("serve.profile_rows", server=self._sid, n=n) as sp:
+            out = _chunk_jitted("serve_profile", _profile_impl, self._statics,
+                                donate=(0, 3))(padded, jnp.asarray(rows),
+                                               self._stress,
+                                               jnp.asarray(adder))
+            sp.bind(out)
         return np.array(out, np.float32)[:n, 0]
 
     def _profile_all_rows(self, batch, now: float) -> np.ndarray:
@@ -337,11 +385,13 @@ class FleetServer:
         cfg = self.cfg
         aged = dataclasses.replace(
             batch, age_years=np.full(batch.n_dimms, now, np.float32))
-        return np.asarray(profile_population_arrays(
-            aged, region="all", temp_C=cfg.profile_temp_C,
-            refresh_ms=cfg.profile_refresh_ms,
-            guard_cycles=cfg.guard_cycles,
-            multibit_only=cfg.multibit_only), np.float32)[:, :4]
+        with _span("serve.conventional_sweep", server=self._sid,
+                   n=batch.n_dimms):
+            return np.asarray(profile_population_arrays(
+                aged, region="all", temp_C=cfg.profile_temp_C,
+                refresh_ms=cfg.profile_refresh_ms,
+                guard_cycles=cfg.guard_cycles,
+                multibit_only=cfg.multibit_only), np.float32)[:, :4]
 
     def _adder(self, batch, now: float) -> np.ndarray:
         """The aged operating-condition adder: ``condition_adders`` with the
@@ -365,18 +415,24 @@ class FleetServer:
         """One DIMM's serving record; KeyError for unknown serials."""
         if int(serial) not in self.state.index:
             raise KeyError(f"serial {int(serial)} not registered")
-        i = self.state.index[int(serial)]
-        return {"serial": int(serial),
-                "table": self.state.view("table")[i].copy(),
-                "label": int(self.state.view("label")[i]),
-                "path": int(self.state.view("path")[i]),
-                "profiled_at": float(self.state.view("profiled_at")[i]),
-                "due_at": float(self.state.view("due_at")[i])}
+        with _span("serve.query", self._m_qlat, server=self._sid):
+            i = self.state.index[int(serial)]
+            out = {"serial": int(serial),
+                   "table": self.state.view("table")[i].copy(),
+                   "label": int(self.state.view("label")[i]),
+                   "path": int(self.state.view("path")[i]),
+                   "profiled_at": float(self.state.view("profiled_at")[i]),
+                   "due_at": float(self.state.view("due_at")[i])}
+        self._m_queries.inc()
+        return out
 
     def query_batch(self, serials) -> np.ndarray:
         """(Q, 4) timing tables for a batch of serials (one gather)."""
-        rows = self.state.rows_for(serials)
-        return self.state.view("table")[rows]
+        with _span("serve.query_batch", self._m_qlat, server=self._sid):
+            rows = self.state.rows_for(serials)
+            out = self.state.view("table")[rows]
+        self._m_queries.inc(len(rows))
+        return out
 
     def staleness(self, now: float | None = None) -> dict:
         """Fleet staleness report at ``now`` (default: the server clock):
@@ -385,10 +441,36 @@ class FleetServer:
         now = self.clock if now is None else float(now)
         age = now - self.state.view("profiled_at")
         horizon = self.state.view("horizon")
-        return {"now": now,
-                "max_staleness_years": float(age.max()) if len(age) else 0.0,
-                "bound_years": float(horizon.max()) if len(horizon) else 0.0,
-                "n_overdue": int((self.state.view("due_at") < now).sum())}
+        out = {"now": now,
+               "max_staleness_years": float(age.max()) if len(age) else 0.0,
+               "bound_years": float(horizon.max()) if len(horizon) else 0.0,
+               "n_overdue": int((self.state.view("due_at") < now).sum())}
+        self._m_age.set(out["max_staleness_years"])
+        return out
+
+    def metrics(self) -> dict:
+        """This server's observability block, read off the obs registry:
+        serving-path mix, query count + latency histogram summary, the
+        staleness gauge (refreshed here), generation-cache hit rate, and the
+        chunk-cache compile counts — the numbers ``serve_bench.py`` reports
+        and cross-checks against its independently computed gate values."""
+        self.staleness()                       # refresh the age gauge
+        paths = {name: int(c.value()) for name, c in self._m_path.items()}
+        matched = paths["hit"] + paths["discover"]
+        total = matched + paths["conventional"]
+        fam = _OBS_REGISTRY.get("repro_compile_programs_total")
+        compiles = {lv[1]: int(child.value()) for lv, child in fam._series()
+                    if lv and lv[0] == "chunk"}
+        return {"server": self._sid,
+                "paths": paths,
+                "ingested": int(self._ingested),
+                "hit_rate": paths["hit"] / total if total else 0.0,
+                "generations": int(self.cache.n_generations),
+                "queries": int(self._m_queries.value()),
+                "query_latency_seconds": self._m_qlat.summary(),
+                "max_table_age_years": float(self._m_age.value()),
+                "reprofiled": int(self._m_reprof.value()),
+                "chunk_compiles": compiles}
 
     # --------------------------------------------------------------- tick
 
@@ -403,8 +485,11 @@ class FleetServer:
             i = self.state.index.get(s)
             if i is not None and self.state.view("due_at")[i] <= now:
                 due.append(s)
-        for lo in range(0, len(due), self._full):
-            self._reprofile(np.asarray(due[lo:lo + self._full]), now)
+        with _span("serve.tick", server=self._sid, now=now,
+                   reprofiled=len(due)):
+            for lo in range(0, len(due), self._full):
+                self._reprofile(np.asarray(due[lo:lo + self._full]), now)
+        self._m_reprof.inc(len(due))
         self.clock = max(self.clock, now)
         return {"now": now, "reprofiled": len(due)}
 

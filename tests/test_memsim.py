@@ -281,10 +281,15 @@ def test_sharded_speedup_grid_multi_device_padding():
 def test_speedup_population_no_retrace_no_rebuild():
     """Satellite: repeated population/grid calls with new table VALUES reuse
     both the compiled program (N_TRACES) and the cached host traces
-    (N_TRACE_BUILDS)."""
+    (N_TRACE_BUILDS).  The counters now live in the obs registry; the module
+    attributes are a PEP 562 compat shim over it, so the test reads both and
+    asserts they agree."""
+    from repro.obs import REGISTRY
     sim.system_speedup_population(TABLES, n_requests=250)          # warm
     sim.evaluate_system_grid([STANDARD, TABLES[0]], n_requests=250)
-    n0, b0 = sim.N_TRACES, sim.N_TRACE_BUILDS
+    n0 = REGISTRY.value("repro_memsim_traces_total")
+    b0 = REGISTRY.value("repro_memsim_trace_builds_total")
+    assert (sim.N_TRACES, sim.N_TRACE_BUILDS) == (n0, b0)  # shim == registry
     for k in range(3):
         sim.system_speedup_population(TABLES - 1.25 * k, n_requests=250)
     s = sim.evaluate_system_grid([STANDARD, TimingParams(trcd=10.0)],
@@ -292,6 +297,8 @@ def test_speedup_population_no_retrace_no_rebuild():
     for cores in (1, 2, 4):
         sim.speedup_summary(TimingParams(trcd=10.0), STANDARD, cores=cores,
                             ipcs=s)
+    assert REGISTRY.value("repro_memsim_traces_total") == n0
+    assert REGISTRY.value("repro_memsim_trace_builds_total") == b0
     assert sim.N_TRACES == n0
     assert sim.N_TRACE_BUILDS == b0
     assert ramlite.N_TRACES == sim.N_TRACES     # live compat counter
