@@ -17,9 +17,21 @@ bit-identical results (decision-for-decision for the operating grid, whose
 lambdas are float32 reductions).  A ninth gate times the streamed chunk
 scan with the obs metrics registry enabled vs disabled
 (``obs_overhead_smoke``): tables must stay bit-identical, zero new chunk
-programs may lower, and the wall-time delta must stay under 2%.
+programs may lower, and the wall-time delta must stay under 2%.  A tenth
+gate (``kernel_route_smoke``) checks the backend-dispatch story itself: the
+registry-dispatched default CPU route (``cpu-ref`` jnp oracles) must beat
+the forced ``cpu-pallas-interpret`` route >= 5x on two integer kernels with
+bit-identical outputs — the measured reason the CPU default is the oracle.
 
     PYTHONPATH=src python benchmarks/kernel_bench.py --smoke
+
+``--bench-kernels`` times the nine registry dispatch sites under every
+backend route available on this host (``ops.valid_tags()``) and appends one
+row per (kernel, backend) to ``benchmarks/BENCH_kernels.json`` — the
+committed per-backend kernel trajectory (``run.py --check`` validates the
+schema and that every backend covers all nine kernels):
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py --bench-kernels
 
 ``--bench-streaming`` runs the fleet-scale streaming trajectory (profile +
 generation discovery of a ``--fleet``-sized synthetic population under a
@@ -43,19 +55,13 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 
 def backend_tag() -> str:
-    """The actual execution backend of this process, for benchmark rows:
-    ``<jax backend>-pallas[-interpret]`` or ``<jax backend>-ref`` (jnp oracle
-    kernels under REPRO_FORCE_REF=1).  Replaces the old hardcoded
-    ``interpret-mode`` literal, which claimed interpret-mode even in the
-    oracle CI leg."""
-    import jax
-
+    """The resolved dispatch tag for benchmark rows — a thin re-export of
+    ``kernels.ops.backend_tag`` (the single backend authority), so bench and
+    dispatch can never disagree.  This replaces the local reimplementation
+    that used to live here; ``serve_bench.py`` still imports it from this
+    module."""
     from repro.kernels import ops
-    plat = jax.default_backend()
-    if not ops.use_pallas():
-        return f"{plat}-ref"
-    return f"{plat}-pallas-interpret" if ops.interpret_mode() \
-        else f"{plat}-pallas"
+    return ops.backend_tag()
 
 
 def _bench(fn, *args, iters=3, **kw):
@@ -70,37 +76,29 @@ def _bench(fn, *args, iters=3, **kw):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
-def kernels():
+def kernel_cases():
+    """The nine registry dispatch sites as benchable cases, in registry
+    order: ``(kernel, shape, call)`` where ``call()`` runs the dispatch site
+    once on fixed inputs under whatever backend is ambient.  One list feeds
+    the legacy CSV dict (``kernels``), the committed per-backend trajectory
+    (``bench_kernels``) and the route gate (``kernel_route_smoke``), so none
+    of them can drift out of sync with ``kernels/registry.py``."""
     from repro.kernels import ops
     rng = np.random.default_rng(0)
-    out = {}
     data = rng.integers(0, 2, (4096, 64)).astype(np.int32)
-    out["secded_encode_4096w_us"] = round(_bench(ops.secded_encode, data), 1)
     code = rng.integers(0, 2, (4096, 72)).astype(np.int32)
-    out["secded_syndrome_4096w_us"] = round(_bench(ops.secded_syndrome, code), 1)
     bursts = rng.integers(0, 2, (1024, 576)).astype(np.int32)
-    out["diva_shuffle_1024b_us"] = round(_bench(ops.diva_shuffle, bursts), 1)
-    out["shuffle_permute_unshuffled_1024b_us"] = round(
-        _bench(ops.diva_shuffle, bursts, shuffle=False), 1)
     rf = np.linspace(0, 1, 256)
-    out["rc_transient_256c_us"] = round(_bench(ops.rc_transient, rf, rf), 1)
-    r, k, v, w = (rng.normal(0, 0.3, (2, 128, 4, 32)).astype(np.float32) for _ in range(4))
+    r, k, v, w = (rng.normal(0, 0.3, (2, 128, 4, 32)).astype(np.float32)
+                  for _ in range(4))
     u = rng.normal(0, 0.1, (4, 32)).astype(np.float32)
-    out["wkv6_2x128x4x32_us"] = round(_bench(ops.wkv6, r, k, v, w, u), 1)
     row_src = rng.integers(0, 512, 512).astype(np.int32)
     d_mat = np.linspace(0.1, 1.0, 8).astype(np.float32)
     coeffs = np.array([3.9, 2.1, 0.4, 0.8, 0.4, 7.5, 0.15, 3e-6, 3.5],
                       np.float32)
-    out["fail_prob_8x512x128_us"] = round(
-        _bench(ops.fail_prob, row_src, d_mat, coeffs, cols=128), 1)
     op_coeffs = np.concatenate(
         [coeffs, np.array([1.2, 4.0, 0.4, 1.0, 0.3, 1.2], np.float32)])
-    out["fail_prob_op_8x512x128_us"] = round(
-        _bench(ops.fail_prob_op, row_src, d_mat, op_coeffs, cols=128,
-               voltage=True, retention=True), 1)
     sig_counts = rng.integers(0, 2 ** 20, (4096, 512)).astype(np.int32)
-    out["bit_signature_4096x512_us"] = round(
-        _bench(ops.bit_signature, sig_counts, nbits=9), 1)
     sched_args = (rng.integers(0, 16, 8).astype(np.int32),
                   rng.integers(0, 50, 8).astype(np.int32),
                   rng.integers(0, 2, 8).astype(np.int32),
@@ -116,9 +114,154 @@ def kernels():
                   rng.integers(4, 30, (16, 6)).astype(np.int32),
                   (np.arange(16) % 2).astype(np.int32),
                   (np.arange(16) % 2).astype(np.int32))
-    out["bank_sched_q8_b16_us"] = round(
-        _bench(ops.bank_sched, *sched_args, tbl=4, trrd=5, tfaw=24,
-               use_bus=True, use_act=True), 1)
+    return [
+        ("secded_encode", "4096w", ops.secded_encode, (data,), {}),
+        ("secded_syndrome", "4096w", ops.secded_syndrome, (code,), {}),
+        ("fail_prob", "8x512x128", ops.fail_prob,
+         (row_src, d_mat, coeffs), {"cols": 128}),
+        ("fail_prob_op", "8x512x128", ops.fail_prob_op,
+         (row_src, d_mat, op_coeffs),
+         {"cols": 128, "voltage": True, "retention": True}),
+        ("bit_signature", "4096x512", ops.bit_signature,
+         (sig_counts,), {"nbits": 9}),
+        ("bank_sched", "q8_b16", ops.bank_sched, sched_args,
+         dict(tbl=4, trrd=5, tfaw=24, use_bus=True, use_act=True)),
+        ("diva_shuffle", "1024b", ops.diva_shuffle, (bursts,), {}),
+        ("rc_transient", "256c", ops.rc_transient, (rf, rf), {}),
+        ("wkv6", "2x128x4x32", ops.wkv6, (r, k, v, w, u), {}),
+    ]
+
+
+def _bench_case(fn, args, kw, iters=3):
+    """Time one dispatch site the way production callers run it: under
+    ``jax.jit``, so the ambient backend resolves at TRACE time and the timed
+    iterations replay the compiled program.  (Timing the eager wrapper would
+    charge the oracle route for op-by-op dispatch no real caller pays —
+    every entry point in core/substrate jits around these sites.)  A FRESH
+    jit wrapper per call keeps one backend's compiled program from serving
+    another backend's timing via the jit cache.  Returns (us_per_call,
+    output pytree).
+
+    The one oracle that is host-side NumPy under the hood
+    (``ref.rc_transient`` -> ``spice.sense_time``) cannot trace; it falls
+    back to eager timing, which is also exactly how its callers run it."""
+    import jax
+    jfn = jax.jit(lambda *a: fn(*a, **kw))
+    try:
+        jax.block_until_ready(jfn(*args))  # compile
+    except jax.errors.TracerArrayConversionError:
+        jfn = lambda *a: fn(*a, **kw)  # noqa: E731 — eager fallback
+        jax.block_until_ready(jfn(*args))  # warm any inner jits
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jfn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+def kernels(tag: str | None = None):
+    """Legacy flat CSV dict ``{f"{kernel}_{shape}_us": us}`` over the nine
+    registry sites (plus the unshuffled-layout permutation, which rides the
+    ``diva_shuffle`` site); ``tag`` pins the backend route via
+    ``ops.force_backend`` (None = the ambient ``backend_tag()``)."""
+    import contextlib
+
+    from repro.kernels import ops
+    ctx = ops.force_backend(tag) if tag else contextlib.nullcontext()
+    with ctx:
+        out = {f"{name}_{shape}_us": round(_bench_case(fn, args, kw)[0], 1)
+               for name, shape, fn, args, kw in kernel_cases()}
+        bursts = np.random.default_rng(0).integers(
+            0, 2, (1024, 576)).astype(np.int32)
+        out["shuffle_permute_unshuffled_1024b_us"] = round(
+            _bench_case(ops.diva_shuffle, (bursts,), {"shuffle": False})[0],
+            1)
+    return out
+
+
+def bench_kernels(out_path: Path, tags: tuple[str, ...] | None = None,
+                  iters: int = 3) -> list[dict]:
+    """The committed per-backend kernel trajectory: time every registry
+    dispatch site under every backend route available on this host and
+    append one row per (kernel, backend) to ``BENCH_kernels.json``.
+
+    ``speedup_vs_ref`` is ``us_ref / us_backend``, both measured in THIS
+    process — >1 means the route beats the jnp oracle.  On a CPU host the
+    interpret route is the semantics validator, not the fast path, so its
+    speedups sit well under 1 (the measured reason ``cpu-ref`` is the CPU
+    default); the compiled gpu-triton / tpu-mosaic rows are where the >1
+    trajectory lives.
+    """
+    from repro.kernels import ops
+    if tags is None:
+        tags = ops.valid_tags()  # "<plat>-ref" always leads
+    cases = kernel_cases()
+    ref_us = {}
+    with ops.force_backend(tags[0]):
+        for name, _, fn, a, kw in cases:
+            ref_us[name] = _bench_case(fn, a, kw, iters=iters)[0]
+    date = time.strftime("%Y-%m-%d")
+    rows = []
+    for tag in tags:
+        with ops.force_backend(tag):
+            for name, shape, fn, a, kw in cases:
+                us = ref_us[name] if tag == tags[0] \
+                    else _bench_case(fn, a, kw, iters=iters)[0]
+                rows.append({
+                    "date": date, "backend": tag, "kernel": name,
+                    "shape": shape, "us_per_call": round(us, 1),
+                    "speedup_vs_ref":
+                    round(ref_us[name] / max(us, 1e-9), 3)})
+    history = []
+    if out_path.exists():
+        history = json.loads(out_path.read_text())
+    history.extend(rows)
+    out_path.write_text(json.dumps(history, indent=2) + "\n")
+    for row in rows:
+        print(f"kernel_{row['kernel']}_{row['shape']}_us,"
+              f"{row['us_per_call']},backend={row['backend']};"
+              f"speedup_vs_ref={row['speedup_vs_ref']}")
+    return rows
+
+
+def kernel_route_smoke() -> dict:
+    """The backend-route gate (the tenth ``--smoke`` gate): the registry-
+    dispatched default CPU route (``cpu-ref`` jnp oracles) vs the forced
+    ``cpu-pallas-interpret`` route on two integer kernels.  Outputs must be
+    BIT-identical (the dispatch layer may never change results, only where
+    they run) and the default route >= 5x faster — the measured fact that
+    flipped the CPU default from interpret-everything to the oracle graphs.
+    SECDED at scrub scale (32k codewords) is where the interpret tax bites:
+    the oracle is one fused XLA matmul, the interpret route replays the
+    Pallas interpreter per grid step (measured 14-30x here).
+    """
+    import jax
+
+    from repro.kernels import ops
+    ref_tag, interp_tag = ops.valid_tags()[:2]
+    rng = np.random.default_rng(1)
+    cases = [
+        ("secded_encode", "32768w", ops.secded_encode,
+         (rng.integers(0, 2, (32768, 64)).astype(np.int32),), {}),
+        ("secded_syndrome", "32768w", ops.secded_syndrome,
+         (rng.integers(0, 2, (32768, 72)).astype(np.int32),), {}),
+    ]
+    out = {"ref_tag": ref_tag, "interpret_tag": interp_tag,
+           "results_match": True, "min_speedup": float("inf")}
+    for name, _, fn, a, kw in cases:
+        with ops.force_backend(ref_tag):
+            us_ref, got_ref = _bench_case(fn, a, kw)
+        with ops.force_backend(interp_tag):
+            us_int, got_int = _bench_case(fn, a, kw)
+        speedup = round(us_int / max(us_ref, 1e-9), 1)
+        out[f"{name}_ref_us"] = round(us_ref, 1)
+        out[f"{name}_interpret_us"] = round(us_int, 1)
+        out[f"{name}_speedup"] = speedup
+        out["results_match"] &= all(
+            np.array_equal(np.asarray(x), np.asarray(y))
+            for x, y in zip(jax.tree_util.tree_leaves(got_ref),
+                            jax.tree_util.tree_leaves(got_int)))
+        out["min_speedup"] = min(out["min_speedup"], speedup)
     return out
 
 
@@ -477,6 +620,59 @@ def obs_overhead_smoke(n_dimms: int = 24, chunk_size: int = 8,
             "results_match": bool(np.array_equal(tables_on, tables_off))}
 
 
+SCRUB_RSS_CHILD = r"""
+import sys
+import numpy as np
+from repro import obs
+from repro.core.streaming import stream_secded_scrub
+
+n_words, chunk, donate = int(sys.argv[1]), int(sys.argv[2]), sys.argv[3] == "1"
+
+def source(lo, hi):
+    rng = np.random.default_rng(lo)
+    return rng.integers(0, 2, (hi - lo, 72), dtype=np.int32)
+
+out = stream_secded_scrub(source, n_words, chunk_size=chunk, donate=donate)
+assert out["n_words"] == n_words
+assert out["clean"] + out["corrected"] + out["uncorrectable"] == n_words
+# obs.peak_rss_mb (VmHWM), NOT getrusage: ru_maxrss survives execve, so a
+# child forked from a fat parent would report the PARENT's peak
+peak_mb = obs.peak_rss_mb()
+print(f"peak_rss_mb={peak_mb:.1f} donated={int(out['donated'])}")
+"""
+
+
+def scrub_rss_probe(n_words: int, chunk: int, donate: bool,
+                    timeout: int = 900) -> float:
+    """Peak RSS (MB) of a streamed SECDED scrub, measured in a CHILD process
+    so the caller's allocations can't inflate the high-water mark (the
+    ``RSS_SMOKE`` idiom from tests/test_streaming.py).  The donated and
+    undonated children run the IDENTICAL program — only ``donate`` differs —
+    so the pairwise delta isolates what buffer donation buys: with the
+    corrected (N, 72) output aliasing the donated input, roughly one chunk
+    buffer of peak RSS.  The child is pinned to the oracle route
+    (``REPRO_FORCE_REF=1``): donation aliasing only pays on routes XLA
+    compiles end to end, and a leg-inherited
+    ``REPRO_BACKEND=cpu-pallas-interpret`` measures a ~0 delta (the
+    interpreter stages buffers host-side), which is not a donation
+    regression.  Used by the donation regression test and available to
+    ad-hoc benching."""
+    import os
+    import subprocess
+    env = dict(os.environ, JAX_PLATFORMS="cpu", REPRO_FORCE_REF="1",
+               PYTHONPATH=str(Path(__file__).resolve().parents[1] / "src"))
+    env.pop("REPRO_NO_DONATE", None)
+    env.pop("REPRO_BACKEND", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRUB_RSS_CHILD, str(n_words), str(chunk),
+         "1" if donate else "0"],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise RuntimeError(f"scrub rss probe failed (rc={proc.returncode}):\n"
+                           f"{proc.stdout}{proc.stderr}")
+    return float(proc.stdout.split("peak_rss_mb=")[1].split()[0])
+
+
 def bench_streaming(n_dimms: int, chunk_size: int, budget_mb: int,
                     out_path: Path) -> dict:
     """The committed bench trajectory: profile + discover a synthetic fleet
@@ -488,8 +684,6 @@ def bench_streaming(n_dimms: int, chunk_size: int, budget_mb: int,
     process, fleet synthesis included) must stay under ``budget_mb`` — the
     documented fixed-memory budget.
     """
-    import resource
-
     from repro.core.geometry import TINY
     from repro.core.population import synthetic_fleet
     from repro.core.streaming import (stream_discover_generations,
@@ -525,7 +719,22 @@ def bench_streaming(n_dimms: int, chunk_size: int, budget_mb: int,
     t_op = time.perf_counter() - t0
     op_fail_frac = np.asarray(og["fail_stats"]["mean"], np.float64)
 
-    peak_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    # the donation-aliased SECDED scrub rides the same chunk substrate: a
+    # fixed-size word stream (independent of the headline fleet size), timed
+    # for the throughput row of the trajectory
+    from repro.core.streaming import stream_secded_scrub
+    scrub_words, scrub_chunk = 1_048_576, 262_144
+
+    def _scrub_source(lo, hi):
+        rng = np.random.default_rng(lo)
+        return rng.integers(0, 2, (hi - lo, 72), dtype=np.int32)
+
+    t0 = time.perf_counter()
+    scrub = stream_secded_scrub(_scrub_source, scrub_words,
+                                chunk_size=scrub_chunk)
+    t_scrub = time.perf_counter() - t0
+
+    peak_mb = obs.peak_rss_mb()
     entry = {
         "date": time.strftime("%Y-%m-%d"),
         "backend": backend_tag(),
@@ -545,6 +754,12 @@ def bench_streaming(n_dimms: int, chunk_size: int, budget_mb: int,
             op_fleet * len(points) / max(t_op, 1e-9)),
         "op_fail_frac_max": round(float(op_fail_frac.max()), 4),
         "fastest_trcd_serial": int(prof["tables_min"]["serial"][0]),
+        "scrub_words": int(scrub_words),
+        "scrub_s": round(t_scrub, 2),
+        "scrub_words_per_s": round(scrub_words / max(t_scrub, 1e-9)),
+        "scrub_donated": bool(scrub["donated"]),
+        "scrub_accounted": bool(scrub["clean"] + scrub["corrected"]
+                                + scrub["uncorrectable"] == scrub_words),
         "budget_mb": int(budget_mb),
         "peak_rss_mb": round(peak_mb, 1),
         "prefix_parity": parity,
@@ -572,6 +787,12 @@ def main() -> None:
     ap.add_argument("--bench-streaming", action="store_true",
                     help="fleet-scale streaming bench; appends to "
                          "BENCH_streaming.json")
+    ap.add_argument("--bench-kernels", action="store_true",
+                    help="per-backend kernel trajectory; appends one row per "
+                         "(kernel, backend) to BENCH_kernels.json")
+    ap.add_argument("--kernels-out",
+                    default=str(Path(__file__).parent
+                                / "BENCH_kernels.json"))
     ap.add_argument("--fleet", type=int, default=1_000_000,
                     help="fleet size for --bench-streaming")
     ap.add_argument("--chunk", type=int, default=4096,
@@ -585,6 +806,9 @@ def main() -> None:
     if args.bench_streaming:
         bench_streaming(args.fleet, args.chunk, args.budget_mb,
                         Path(args.out))
+        return
+    if args.bench_kernels:
+        bench_kernels(Path(args.kernels_out))
         return
     if not args.smoke:
         # microbenchmark mode: report kernel timings, no gating
@@ -686,6 +910,19 @@ def main() -> None:
                  "exceeds the 2% gate")
     print(f"OK: obs overhead {ob['overhead_frac']*100:.2f}% on the streamed "
           f"chunk scan, bit-identical tables, zero new compiles")
+    kr = kernel_route_smoke()
+    for k, v in kr.items():
+        print(f"kernel_route_{k},{v}")
+    if not kr["results_match"]:
+        sys.exit("FAIL: cpu-ref and cpu-pallas-interpret routes disagree "
+                 "(integer kernels must be bit-identical across routes)")
+    if kr["min_speedup"] < 5.0:
+        sys.exit(f"FAIL: default-route speedup {kr['min_speedup']}x < 5x "
+                 f"over forced interpret; the {kr['ref_tag']} default is "
+                 "not earning its keep")
+    print(f"OK: registry-dispatched {kr['ref_tag']} route "
+          f"{kr['min_speedup']}x+ faster than forced {kr['interpret_tag']} "
+          f"on 2 integer kernels, bit-identical outputs")
 
 
 if __name__ == "__main__":

@@ -178,6 +178,66 @@ def validate_bench_entry(entry, where: str, *,
     return errs
 
 
+# The per-backend kernel trajectory (BENCH_kernels.json) has its own row
+# shape — one (kernel, backend) timing per entry, not the streaming-bench
+# core — so it gets a dedicated validator instead of _BENCH_SCHEMA.
+_KERNEL_BENCH_SCHEMA: dict[str, type | tuple] = {
+    "date": str, "backend": str, "kernel": str, "shape": str,
+    "us_per_call": (int, float), "speedup_vs_ref": (int, float),
+}
+_KERNEL_SHAPE_RE = re.compile(r"^[A-Za-z0-9_x]+$")
+
+
+def validate_kernel_bench_entries(history: list, name: str) -> list[str]:
+    """Schema check for the whole BENCH_kernels.json trajectory: every row
+    well-typed, every kernel a registry dispatch site, and every backend
+    that appears covering ALL dispatch sites — a partial backend sweep is a
+    broken trajectory (a dashboard would silently plot holes)."""
+    from repro.kernels.registry import KERNEL_NAMES
+    known = set(KERNEL_NAMES)
+    errs: list[str] = []
+    per_backend: dict[str, set] = {}
+    for i, entry in enumerate(history):
+        where = f"{name}[{i}]"
+        if not isinstance(entry, dict):
+            errs.append(f"{where}: entry is not a JSON object")
+            continue
+        bad = False
+        for key, typ in _KERNEL_BENCH_SCHEMA.items():
+            if key not in entry:
+                errs.append(f"{where}: missing required key {key!r}")
+                bad = True
+            elif isinstance(entry[key], bool) or not isinstance(entry[key],
+                                                               typ):
+                errs.append(f"{where}: {key}={entry[key]!r} is not {typ}")
+                bad = True
+        if bad:
+            continue
+        if not _BENCH_DATE_RE.match(entry["date"]):
+            errs.append(f"{where}: malformed date {entry['date']!r}")
+        if not _BENCH_BACKEND_RE.match(entry["backend"]):
+            errs.append(f"{where}: malformed backend {entry['backend']!r}")
+        if entry["kernel"] not in known:
+            errs.append(f"{where}: unknown kernel {entry['kernel']!r} "
+                        f"(registry sites: {sorted(known)})")
+        if not _KERNEL_SHAPE_RE.match(entry["shape"]):
+            errs.append(f"{where}: malformed shape {entry['shape']!r}")
+        if entry["us_per_call"] <= 0:
+            errs.append(f"{where}: us_per_call={entry['us_per_call']} "
+                        "must be positive")
+        if entry["speedup_vs_ref"] <= 0:
+            errs.append(f"{where}: speedup_vs_ref="
+                        f"{entry['speedup_vs_ref']} must be positive")
+        per_backend.setdefault(entry["backend"], set()).add(entry["kernel"])
+    for tag, kernels_seen in sorted(per_backend.items()):
+        missing = known - kernels_seen
+        if missing:
+            errs.append(f"{name}: backend {tag!r} missing kernels "
+                        f"{sorted(missing)} — every backend row set must "
+                        "cover all registry dispatch sites")
+    return errs
+
+
 def check_bench_files(bench_dir: Path) -> list[str]:
     """Validate every committed ``BENCH_*.json`` under ``bench_dir``.
 
@@ -195,6 +255,9 @@ def check_bench_files(bench_dir: Path) -> list[str]:
             continue
         if not isinstance(history, list) or not history:
             errs.append(f"{path.name}: trajectory must be a non-empty list")
+            continue
+        if path.name == "BENCH_kernels.json":
+            errs.extend(validate_kernel_bench_entries(history, path.name))
             continue
         for i, entry in enumerate(history):
             where = f"{path.name}[{i}]"

@@ -99,8 +99,6 @@ def bench_serve(n_dimms: int, chunk_size: int, budget_mb: int,
                 min_qps: float, out_path: Path | None,
                 metrics_out: str | None = None,
                 trace_out: str | None = None) -> dict:
-    import resource
-
     from repro import obs
     from repro.core import substrate
     from repro.core.geometry import TINY
@@ -177,7 +175,7 @@ def bench_serve(n_dimms: int, chunk_size: int, budget_mb: int,
     }
     metrics_ok = all(checks.values())
 
-    peak_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    peak_mb = obs.peak_rss_mb()
     entry = {
         "date": time.strftime("%Y-%m-%d"),
         "backend": backend_tag(),

@@ -65,10 +65,16 @@ def decode(code_bits):
     return decode_given_syndrome(code_bits, syndrome(code_bits))
 
 
-def decode_given_syndrome(code_bits, syn):
-    """Correction/classification from a precomputed (N, 8) syndrome — shared
-    by ``decode`` and the kernel-backed memsys codec (which computes the
-    syndrome on the Pallas path via ``kernels.ops.secded_syndrome``)."""
+def correct_codewords(code_bits, syn):
+    """(N, 72) codewords + precomputed (N, 8) syndrome -> (fixed (N, 72),
+    status (N,)): the FULL corrected codewords (single-bit flips applied at
+    data *and* check positions), status 0/1/2 as in ``decode``.
+
+    This is the streamed-scrub primitive (``core/streaming.
+    stream_secded_scrub``): keeping the full 72-bit width means the corrected
+    output has exactly the input's shape/dtype, so XLA can alias it onto the
+    donated input buffer — the scan's peak-memory lever.
+    """
     code_bits = jnp.asarray(code_bits, jnp.int32)
     syn = jnp.asarray(syn, jnp.int32)
     syn_val = (syn * jnp.asarray(_POW2)).sum(-1)   # (N,)
@@ -79,6 +85,14 @@ def decode_given_syndrome(code_bits, syn):
                      jnp.arange(CODE_BITS)[None, :] == pos[:, None], False)
     fixed = jnp.where(flip, 1 - code_bits, code_bits)
     status = jnp.where(clean, 0, jnp.where(single, 1, 2)).astype(jnp.int32)
+    return fixed, status
+
+
+def decode_given_syndrome(code_bits, syn):
+    """Correction/classification from a precomputed (N, 8) syndrome — shared
+    by ``decode`` and the kernel-backed memsys codec (which computes the
+    syndrome on the Pallas path via ``kernels.ops.secded_syndrome``)."""
+    fixed, status = correct_codewords(code_bits, syn)
     return fixed[:, :DATA_BITS], status
 
 

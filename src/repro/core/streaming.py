@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import ecc as _ecc
 from repro.core.geometry import DimmGeometry
 from repro.core.latency import (DEFAULT_ITERS, DEFAULT_PATTERNS,
                                 PATTERN_STRESS, access_vdd_shift,
@@ -55,8 +56,9 @@ from repro.core.substrate import (DimmBatch, _LEAVES, _axis_context,
                                   _pack_op_coeffs, _pad0, _profile_impl,
                                   _resolve_rows, _row_lambda_impl,
                                   _run_sharded, _shuffling_impl,
-                                  condition_adders, lifetime_adders,
-                                  operating_grid_tables, pattern_stress)
+                                  condition_adders, donation_enabled,
+                                  lifetime_adders, operating_grid_tables,
+                                  pattern_stress)
 from repro.core.timing import PARAMS, VDD_STD
 from repro.obs import REGISTRY as _OBS_REGISTRY
 from repro.obs import tracing as _obs_tracing
@@ -787,6 +789,86 @@ def stream_bit_signature(counts_fn, n_dimms: int, *, chunk_size: int = 4096,
              for lo, hi in chunk_spans(n_dimms, chunk_size, mesh)]
     return np.concatenate(parts, axis=0) if parts \
         else np.zeros((0, 0, 0), np.float32)
+
+
+# ------------------------------------------------- streamed SECDED scrub
+
+def _scrub_impl(code, *, pallas: bool):
+    """One scrub chunk: syndrome (kernel dispatch) -> single-bit correction.
+    Returns (fixed (C, 72) i32, status (C,) i32).  ``fixed`` has exactly the
+    input's shape and dtype ON PURPOSE: the chunk program donates ``code``,
+    and XLA aliases the corrected output onto the donated buffer — this is
+    the one streamed entry point where donation reclaims a whole chunk of
+    peak RSS (outputs elsewhere are reductions, which can't alias)."""
+    # deferred import: kernels.ops pulls in every kernel module, which import
+    # core.latency -> core.__init__ -> this module (cycle at import time)
+    from repro.kernels import ops as _kops
+    code = jnp.asarray(code, jnp.int32)
+    syn = _kops.secded_syndrome(code, pallas=pallas)
+    return _ecc.correct_codewords(code, syn)
+
+
+def stream_secded_scrub(source, n_words: int | None = None, *,
+                        chunk_size: int = 262_144, collect: bool = False,
+                        donate: bool = True, pallas: bool | None = None
+                        ) -> dict:
+    """Streamed controller-side ECC scrub: run SECDED(72,64) syndrome +
+    single-bit correction over a stream of codewords in fixed memory — the
+    paper's DIVA-Shuffling ECC path at checkpoint-scrubbing scale.
+
+    ``source`` is a (N, 72) 0/1 array, or a ``(lo, hi) -> (hi-lo, 72)``
+    chunk factory (then ``n_words`` is required and no full array is ever
+    resident).  Each chunk's codeword buffer is donated to the chunk program
+    (``donate=False`` or ``REPRO_NO_DONATE=1`` opts out for A/B memory
+    measurement); the corrected chunk aliases it, so the scan's peak RSS is
+    one chunk buffer smaller than an undonated scan — asserted by the slow
+    RSS regression test.  Zero-padded tail rows scrub as clean and are
+    sliced off before counting, so counts and collected words are exact at
+    any chunk size.
+
+    Returns clean/corrected/uncorrectable counts (+ ``codewords`` (N, 72)
+    when ``collect``).
+    """
+    if callable(source):
+        if n_words is None:
+            raise ValueError("n_words is required with a chunk factory")
+        fetch = source
+    else:
+        arr = np.asarray(source)
+        n_words = arr.shape[0]
+        fetch = lambda lo, hi: arr[lo:hi]
+    if pallas is None:
+        from repro.kernels import ops as _kops
+        pallas = _kops.use_pallas()
+    statics = dict(pallas=pallas)
+    donate_argnums = (0,) if donate else ()
+    spans = chunk_spans(n_words, chunk_size, None)
+    counts = np.zeros(3, np.int64)
+    collected: list[np.ndarray] = []
+    for lo, hi in spans:
+        chunk = np.asarray(fetch(lo, hi), np.int32)
+        m = hi - lo
+        if chunk.shape != (m, _ecc.CODE_BITS):
+            raise ValueError(f"scrub chunk [{lo}:{hi}) has shape "
+                             f"{chunk.shape}, want ({m}, {_ecc.CODE_BITS})")
+        if m < chunk_size:
+            chunk = np.pad(chunk, ((0, chunk_size - m), (0, 0)))
+        fixed, status = _chunk_call("secded_scrub", _scrub_impl,
+                                    (jnp.asarray(chunk),), statics,
+                                    donate_argnums, (0,), None)
+        counts += np.bincount(np.asarray(status)[:m], minlength=3)[:3]
+        if collect:
+            collected.append(np.asarray(fixed[:m]))
+        del fixed  # drop the (possibly input-aliased) chunk before the next
+    res = {"n_words": int(n_words), "n_chunks": len(spans),
+           "chunk_size": int(chunk_size),
+           "clean": int(counts[0]), "corrected": int(counts[1]),
+           "uncorrectable": int(counts[2]),
+           "donated": bool(donate and donation_enabled())}
+    if collect:
+        res["codewords"] = (np.concatenate(collected) if collected
+                            else np.zeros((0, _ecc.CODE_BITS), np.int32))
+    return res
 
 
 def _campaign_impl(batch: DimmBatch, t_op, stress, adder, *, pidx: int,

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from dataclasses import dataclass
 from typing import TYPE_CHECKING, Any, Sequence
 
@@ -717,6 +718,18 @@ _OBS_REUSES = _OBS_REGISTRY.counter(
 _CHUNK_JIT_CACHE: dict = {}
 
 
+def donation_enabled() -> bool:
+    """Buffer donation kill switch: ``REPRO_NO_DONATE=1`` makes every
+    ``_chunk_jitted`` program non-donating (``donate_argnums=()``).  Results
+    are bit-identical either way — donation only changes buffer lifetime —
+    so this exists for A/B memory measurement (the streamed-scrub RSS
+    regression test) and as an escape hatch if an XLA build mishandles
+    aliasing.  Read at program-build time; the effective donate tuple keys
+    the chunk cache, so flipping it mid-process compiles a separate program
+    rather than corrupting a cached one."""
+    return os.environ.get("REPRO_NO_DONATE", "0") != "1"
+
+
 def _chunk_jitted(name: str, impl, statics: dict, donate: tuple):
     """Cached donating jit of one chunk program for the streaming driver
     (``core/streaming.py``).
@@ -730,6 +743,8 @@ def _chunk_jitted(name: str, impl, statics: dict, donate: tuple):
     compiled program per chunk *shape*, reused for every chunk and every
     population size — the dense path re-lowers per population size instead.
     """
+    if donation_enabled() is False:
+        donate = ()
     key = (name, tuple(sorted(statics.items())), donate)
     prog = _CHUNK_JIT_CACHE.get(key)
     if prog is None:

@@ -134,26 +134,52 @@ def _make_kernel(statics: dict):
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "tbl", "trrd", "tfaw", "use_bus", "use_act", "interpret"))
+    "tbl", "trrd", "tfaw", "use_bus", "use_act", "q_tile", "interpret"))
 def bank_sched(q_bank, q_row, q_write, q_arrive, q_valid,
                open_row, ready, pre_ready, bus_ready, last_act, faw_old,
                t_now, tc, bank_rank, bank_chan, *,
                tbl: int, trrd: int, tfaw: int,
-               use_bus: bool, use_act: bool, interpret: bool = True):
+               use_bus: bool, use_act: bool, q_tile: int | None = None,
+               interpret: bool = True):
     """One scheduler step's candidate scoring as a Pallas call; see
     ``candidate_times`` for shapes/semantics.  ``t_now`` is passed as a (1,)
-    int32 array."""
+    int32 array.
+
+    ``q_tile`` tiles the queue axis: the five (Q,) queue slabs and the seven
+    (Q,) outputs split into per-tile blocks while the bank/rank/channel state
+    broadcasts to every tile (full-array blocks at index 0).  Padded slots
+    carry ``q_valid=0``, so their arbitration key is 0 and they are sliced
+    off — per-candidate scoring is independent, so results are exact-int
+    identical at any tile (the tile-invariance contract).
+    """
     statics = dict(tbl=tbl, trrd=trrd, tfaw=tfaw,
                    use_bus=use_bus, use_act=use_act)
     q = int(q_bank.shape[0])
+    tile = q if q_tile is None else q_tile
+    pad = (-q) % tile
     i32 = lambda v: jnp.asarray(v, jnp.int32)
-    args = (i32(q_bank), i32(q_row), i32(q_write), i32(q_arrive),
-            jnp.asarray(q_valid).astype(jnp.int32), i32(open_row), i32(ready),
-            i32(pre_ready), i32(bus_ready), i32(last_act), i32(faw_old),
-            i32(t_now).reshape(1), i32(tc), i32(bank_rank), i32(bank_chan))
-    return pl.pallas_call(
+    padq = lambda v: jnp.pad(i32(v), (0, pad)) if pad else i32(v)
+    args = (padq(q_bank), padq(q_row), padq(q_write), padq(q_arrive),
+            padq(jnp.asarray(q_valid).astype(jnp.int32)), i32(open_row),
+            i32(ready), i32(pre_ready), i32(bus_ready), i32(last_act),
+            i32(faw_old), i32(t_now).reshape(1), i32(tc), i32(bank_rank),
+            i32(bank_chan))
+    qp = q + pad
+    B, Rk = args[5].shape[0], args[9].shape[0]
+    C = args[8].shape[0]
+    q_spec = pl.BlockSpec((tile,), lambda i: (i,))
+    full = lambda *shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    out = pl.pallas_call(
         _make_kernel(statics),
-        out_shape=tuple(jax.ShapeDtypeStruct((q,), jnp.int32)
+        grid=(qp // tile,),
+        in_specs=[q_spec, q_spec, q_spec, q_spec, q_spec,
+                  full(B), full(B), full(B), full(C), full(Rk), full(Rk),
+                  full(1), full(B, 6), full(B), full(B)],
+        out_specs=[q_spec] * len(OUTPUTS),
+        out_shape=tuple(jax.ShapeDtypeStruct((qp,), jnp.int32)
                         for _ in OUTPUTS),
         interpret=interpret,
     )(*args)
+    if pad:
+        out = tuple(o[:q] for o in out)
+    return out

@@ -19,6 +19,11 @@ simulated campaigns sit orders of magnitude under that.
 The call is vmap-able over leading axes the same way ``fail_prob`` is; the
 batched entry point (``discovery.signatures`` via ``kernels/ops.py``) instead
 flattens (D, subarrays) into the row axis, which keeps one grid.
+
+Registry contract: dispatched as ``bit_signature`` with tile space {default,
+64, 128, 512} over the leading (vector) axis; padded all-zero count vectors
+produce all-zero signatures and are sliced back, and the exact int32
+reduction makes outputs bit-identical at any tile.
 """
 from __future__ import annotations
 

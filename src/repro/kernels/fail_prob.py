@@ -77,55 +77,78 @@ def op_cell_probs(rf, colf, even, d_mat, cf, n_rows: int, n_cols: int,
     return p
 
 
-def _make_kernel(n_rows: int, n_cols: int, open_bitline: bool):
+def _make_kernel(block_rows: int, n_cols: int, n_rows_norm: int,
+                 open_bitline: bool):
+    """Kernel over one (block_rows, n_cols) row slab.  Distance normalization
+    always uses the GLOBAL row count ``n_rows_norm`` — rf comes from the
+    row-source VALUES, not the block position, so the per-cell computation is
+    independent of how the row axis is tiled (the tile-invariance contract)."""
     def kernel(rs_ref, dm_ref, cf_ref, out_ref):
-        rows = rs_ref[...].astype(jnp.float32)            # (R, 1)
+        rows = rs_ref[...].astype(jnp.float32)            # (block_rows, 1)
         cf = cf_ref[...]                                  # (1, N_COEFFS)
-        rf = jnp.broadcast_to(rows, (n_rows, n_cols))
-        colf = jax.lax.broadcasted_iota(jnp.float32, (n_rows, n_cols), 1)
-        even = (jax.lax.broadcasted_iota(jnp.int32, (n_rows, n_cols), 1)
+        rf = jnp.broadcast_to(rows, (block_rows, n_cols))
+        colf = jax.lax.broadcasted_iota(jnp.float32, (block_rows, n_cols), 1)
+        even = (jax.lax.broadcasted_iota(jnp.int32, (block_rows, n_cols), 1)
                 % 2) == 0
-        p = cell_probs(rf, colf, even, dm_ref[0, 0], cf[0], n_rows, n_cols,
-                       open_bitline)
+        p = cell_probs(rf, colf, even, dm_ref[0, 0], cf[0], n_rows_norm,
+                       n_cols, open_bitline)
         out_ref[...] = p[None]
 
     return kernel
 
 
+def _row_grid(row_src, row_tile: int | None):
+    """Pad the (R, 1) row-source to the row tile; returns (padded, R, tile).
+    ``row_tile=None`` keeps the whole-R single block (the untiled default)."""
+    R = row_src.shape[0]
+    if row_tile is None:
+        return row_src, R, R
+    pad = (-R) % row_tile
+    if pad:  # padded rows index row 0: computed, then sliced off below
+        row_src = jnp.pad(row_src, ((0, pad), (0, 0)))
+    return row_src, R, row_tile
+
+
 @functools.partial(jax.jit, static_argnames=("cols", "open_bitline",
-                                             "interpret"))
+                                             "row_tile", "interpret"))
 def fail_prob(row_src, d_mat, coeffs, *, cols: int, open_bitline: bool = True,
-              interpret: bool = True):
+              row_tile: int | None = None, interpret: bool = True):
     """row_src: (R,) int32 repair-resolved internal rows; d_mat: (M,) f32
     precharge-arrival delays; coeffs: (N_COEFFS,) f32 folded coefficient row.
-    Returns the (M, R, C) failure-probability grid."""
+    Returns the (M, R, C) failure-probability grid.
+
+    ``row_tile`` splits the row axis into a second grid dimension (masked
+    tail via pad-to-tile + slice-back); per-cell results are bit-identical at
+    any tile because each row's computation is independent."""
     row_src = jnp.asarray(row_src, jnp.int32).reshape(-1, 1)
     d_mat = jnp.asarray(d_mat, jnp.float32).reshape(-1, 1)
     coeffs = jnp.asarray(coeffs, jnp.float32).reshape(1, N_COEFFS)
-    R, M = row_src.shape[0], d_mat.shape[0]
-    kern = _make_kernel(R, cols, open_bitline)
-    return pl.pallas_call(
+    row_src, R, tile = _row_grid(row_src, row_tile)
+    Rp, M = row_src.shape[0], d_mat.shape[0]
+    kern = _make_kernel(tile, cols, R, open_bitline)
+    out = pl.pallas_call(
         kern,
-        grid=(M,),
-        in_specs=[pl.BlockSpec((R, 1), lambda i: (0, 0)),
-                  pl.BlockSpec((1, 1), lambda i: (i, 0)),
-                  pl.BlockSpec((1, N_COEFFS), lambda i: (0, 0))],
-        out_specs=pl.BlockSpec((1, R, cols), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((M, R, cols), jnp.float32),
+        grid=(M, Rp // tile),
+        in_specs=[pl.BlockSpec((tile, 1), lambda i, j: (j, 0)),
+                  pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+                  pl.BlockSpec((1, N_COEFFS), lambda i, j: (0, 0))],
+        out_specs=pl.BlockSpec((1, tile, cols), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, Rp, cols), jnp.float32),
         interpret=interpret,
     )(row_src, d_mat, coeffs)
+    return out[:, :R]
 
 
-def _make_op_kernel(n_rows: int, n_cols: int, open_bitline: bool,
-                    voltage: bool, retention: bool):
+def _make_op_kernel(block_rows: int, n_cols: int, n_rows_norm: int,
+                    open_bitline: bool, voltage: bool, retention: bool):
     def kernel(rs_ref, dm_ref, cf_ref, out_ref):
-        rows = rs_ref[...].astype(jnp.float32)            # (R, 1)
+        rows = rs_ref[...].astype(jnp.float32)            # (block_rows, 1)
         cf = cf_ref[...]                                  # (1, N_OP_COEFFS)
-        rf = jnp.broadcast_to(rows, (n_rows, n_cols))
-        colf = jax.lax.broadcasted_iota(jnp.float32, (n_rows, n_cols), 1)
-        even = (jax.lax.broadcasted_iota(jnp.int32, (n_rows, n_cols), 1)
+        rf = jnp.broadcast_to(rows, (block_rows, n_cols))
+        colf = jax.lax.broadcasted_iota(jnp.float32, (block_rows, n_cols), 1)
+        even = (jax.lax.broadcasted_iota(jnp.int32, (block_rows, n_cols), 1)
                 % 2) == 0
-        p = op_cell_probs(rf, colf, even, dm_ref[0, 0], cf[0], n_rows,
+        p = op_cell_probs(rf, colf, even, dm_ref[0, 0], cf[0], n_rows_norm,
                           n_cols, open_bitline, voltage, retention)
         out_ref[...] = p[None]
 
@@ -134,27 +157,31 @@ def _make_op_kernel(n_rows: int, n_cols: int, open_bitline: bool,
 
 @functools.partial(jax.jit, static_argnames=("cols", "open_bitline",
                                              "voltage", "retention",
-                                             "interpret"))
+                                             "row_tile", "interpret"))
 def fail_prob_op(row_src, d_mat, coeffs, *, cols: int,
                  open_bitline: bool = True, voltage: bool = False,
-                 retention: bool = False, interpret: bool = True):
+                 retention: bool = False, row_tile: int | None = None,
+                 interpret: bool = True):
     """Operating-point variant of ``fail_prob``: coeffs is the
     (N_OP_COEFFS,) f32 row ``[*access 0-8, vdd_shift, ret_base, ret_k,
     ret_x, ret_sigma, ret_drop]``; static ``voltage``/``retention`` gate the
     extra terms (both off => value-identical to ``fail_prob`` on cf[:9]).
-    Returns the (M, R, C) summed two-channel probability grid."""
+    Returns the (M, R, C) summed two-channel probability grid.  ``row_tile``
+    tiles the row axis exactly as in ``fail_prob``."""
     row_src = jnp.asarray(row_src, jnp.int32).reshape(-1, 1)
     d_mat = jnp.asarray(d_mat, jnp.float32).reshape(-1, 1)
     coeffs = jnp.asarray(coeffs, jnp.float32).reshape(1, N_OP_COEFFS)
-    R, M = row_src.shape[0], d_mat.shape[0]
-    kern = _make_op_kernel(R, cols, open_bitline, voltage, retention)
-    return pl.pallas_call(
+    row_src, R, tile = _row_grid(row_src, row_tile)
+    Rp, M = row_src.shape[0], d_mat.shape[0]
+    kern = _make_op_kernel(tile, cols, R, open_bitline, voltage, retention)
+    out = pl.pallas_call(
         kern,
-        grid=(M,),
-        in_specs=[pl.BlockSpec((R, 1), lambda i: (0, 0)),
-                  pl.BlockSpec((1, 1), lambda i: (i, 0)),
-                  pl.BlockSpec((1, N_OP_COEFFS), lambda i: (0, 0))],
-        out_specs=pl.BlockSpec((1, R, cols), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((M, R, cols), jnp.float32),
+        grid=(M, Rp // tile),
+        in_specs=[pl.BlockSpec((tile, 1), lambda i, j: (j, 0)),
+                  pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+                  pl.BlockSpec((1, N_OP_COEFFS), lambda i, j: (0, 0))],
+        out_specs=pl.BlockSpec((1, tile, cols), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, Rp, cols), jnp.float32),
         interpret=interpret,
     )(row_src, d_mat, coeffs)
+    return out[:, :R]

@@ -9,6 +9,12 @@ campaign's compute hot spot (96 DIMMs x per-cell transient fits).
 Outputs per cell: v_probe(final), v_cell(final), sense_time (first crossing
 of 0.9 V at the cell's tap). Semantics match core/spice.simulate exactly
 (same discrete update; validated in tests/test_kernels.py).
+
+Registry contract: dispatched as ``rc_transient`` with tile space {default,
+32, 64, 256} over the cell axis.  Per-cell integration is independent, but
+this is a float kernel: across DIFFERENT tiles XLA may fuse/contract the
+Euler update differently, so cross-tile agreement is ulp-scale, not bitwise
+(the fail_prob caveat in ARCHITECTURE 3i) — each fixed tile is deterministic.
 """
 from __future__ import annotations
 

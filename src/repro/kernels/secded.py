@@ -8,6 +8,14 @@ data — the paper's controller-side ECC path is exactly this compute shape.
 VMEM: in tile (TILE_N, 64) f32 = 128 KiB at TILE_N=512, H (64,8) resident,
 out (TILE_N, 8) — comfortably under the ~16 MiB VMEM budget; TILE_N is the
 only tuning knob and is MXU-aligned (multiples of 8/128 for f32 sublanes).
+
+Registry contract (``kernels/registry.py``): dispatched as ``secded_encode``
+/ ``secded_syndrome`` with tile space {default, 128, 256, 1024}; non-dividing
+tiles take the masked-tail route (``_pad_to`` + slice-back: padded all-zero
+codewords encode/syndrome to zero and are discarded), and because every
+codeword's parity is independent the outputs are exact-int identical at ANY
+tile — the template tile-invariance contract every integer kernel follows
+(``tests/test_kernels.py``).
 """
 from __future__ import annotations
 

@@ -12,6 +12,11 @@ chip's bit b lands in beat b // 8) — the Fig 16a baseline the Fig 17
 experiment compares against — and ``perm=`` accepts any custom 576-lane
 permutation (memsys/codec.py uses its round-robin interleave here), so every
 lane-permutation in the repo runs through this one kernel.
+
+Registry contract: dispatched as ``diva_shuffle`` with tile space {default,
+64, 128, 512} over the burst axis; bursts pad to the tile (zero bursts
+permute to zero, sliced back), and a 0/1 permutation matmul is exact int
+arithmetic in f32, so outputs are bit-identical at any tile.
 """
 from __future__ import annotations
 

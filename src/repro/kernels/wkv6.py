@@ -10,6 +10,12 @@ memory-bound hot loop this kernel removes for the rwkv6-1.6b arch.
 
 Validated against the pure-jnp oracle (repro.models.rwkv6.wkv6_scan) in
 tests/test_kernels.py over shape/dtype sweeps.
+
+Registry contract: dispatched as ``wkv6`` with tile space {default, tile_bh
+4/16, (tile_bh=8, chunk=128)}.  The cross-chunk accumulator is a
+``pltpu.VMEM`` scratch — a TPU-only primitive — so the registry lists
+``compiled=(tpu-mosaic,)``: on a GPU host dispatch falls back to the jnp
+oracle instead of pretending Triton can lower this.
 """
 from __future__ import annotations
 

@@ -42,9 +42,30 @@ def enabled() -> bool:
     return REGISTRY.enabled
 
 
+def peak_rss_mb() -> float:
+    """This process's true peak resident set in MB.
+
+    Reads ``VmHWM`` from ``/proc/self/status`` rather than
+    ``getrusage().ru_maxrss``: on Linux the rusage high-water mark is
+    carried ACROSS ``execve``, so a subprocess forked from a fat parent
+    (a mid-suite pytest at several GB) reports the parent's peak, not its
+    own — every RSS-budget child here was silently measuring its parent.
+    ``VmHWM`` lives in the fresh post-exec ``mm`` and only counts this
+    process.  Falls back to ru_maxrss where /proc is unavailable."""
+    try:
+        with open("/proc/self/status") as fh:
+            for line in fh:
+                if line.startswith("VmHWM:"):
+                    return int(line.split()[1]) / 1024.0
+    except OSError:
+        pass
+    import resource
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
 __all__ = [
     "DEFAULT_BUCKETS", "Counter", "Gauge", "Histogram", "Metric",
     "REGISTRY", "Registry", "Span", "active", "chrome_trace", "disable",
-    "enable", "enabled", "span", "start_tracing", "stop_tracing",
-    "trace_events", "write_chrome_trace",
+    "enable", "enabled", "peak_rss_mb", "span", "start_tracing",
+    "stop_tracing", "trace_events", "write_chrome_trace",
 ]

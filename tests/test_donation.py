@@ -1,0 +1,154 @@
+"""Buffer-donation contracts: the streamed-scan peak-memory lever.
+
+Donation may change WHERE buffers live, never WHAT the program computes:
+``stream_secded_scrub`` must produce bit-identical counts and codewords with
+donation on, off (both the ``donate=False`` arg and the ``REPRO_NO_DONATE=1``
+kill switch), and under ``REPRO_FORCE_REF=1``.  The donated input buffer
+must actually be consumed (``.is_deleted()``), and a donated buffer is never
+read back after the call — the safety regression for every streamed entry
+point that opts in.  The measured RSS payoff lives in the slow subprocess
+test in tests/test_streaming.py.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import ecc, substrate
+from repro.core.streaming import stream_secded_scrub
+
+RNG = np.random.default_rng(3)
+
+
+@pytest.fixture(autouse=True)
+def _clean_env(monkeypatch):
+    monkeypatch.delenv("REPRO_NO_DONATE", raising=False)
+
+
+def _crafted_words(n=200, n_single=40, n_double=12):
+    """Encoded words with a known error mix: ``n_single`` single-bit flips
+    (correctable, positions spread over data AND check bits) and
+    ``n_double`` double-bit flips (detectable, uncorrectable)."""
+    data = RNG.integers(0, 2, (n, 64)).astype(np.int32)
+    code = np.asarray(ecc.encode(data))
+    corrupted = code.copy()
+    for i in range(n_single):
+        corrupted[i, (i * 7) % ecc.CODE_BITS] ^= 1
+    for j in range(n_single, n_single + n_double):
+        corrupted[j, (j * 5) % ecc.CODE_BITS] ^= 1
+        corrupted[j, ((j * 5) + 13) % ecc.CODE_BITS] ^= 1
+    return code, corrupted
+
+
+def test_scrub_corrects_crafted_single_bit_errors():
+    code, corrupted = _crafted_words()
+    out = stream_secded_scrub(corrupted, chunk_size=64, collect=True)
+    assert out["donated"] is True
+    assert out["corrected"] == 40 and out["uncorrectable"] == 12
+    assert out["clean"] == 200 - 52
+    # every correctable word is restored to the ORIGINAL codeword,
+    # check-bit errors included (the full-width correct_codewords contract)
+    np.testing.assert_array_equal(out["codewords"][:40], code[:40])
+    np.testing.assert_array_equal(out["codewords"][52:], code[52:])
+
+
+@pytest.mark.parametrize("chunk_size", [37, 64, 200, 512])
+def test_scrub_counts_exact_at_any_chunk_size(chunk_size):
+    _, corrupted = _crafted_words()
+    out = stream_secded_scrub(corrupted, chunk_size=chunk_size)
+    assert (out["clean"], out["corrected"], out["uncorrectable"]) \
+        == (148, 40, 12)
+    assert out["n_words"] == 200
+
+
+def test_scrub_donation_modes_bit_identical(monkeypatch):
+    """donate=True == donate=False == REPRO_NO_DONATE=1 == FORCE_REF=1 —
+    donation and backend routing may never change scrub results."""
+    _, corrupted = _crafted_words()
+    want = stream_secded_scrub(corrupted, chunk_size=64, collect=True)
+    undonated = stream_secded_scrub(corrupted, chunk_size=64, collect=True,
+                                    donate=False)
+    assert undonated["donated"] is False
+    monkeypatch.setenv("REPRO_NO_DONATE", "1")
+    killed = stream_secded_scrub(corrupted, chunk_size=64, collect=True)
+    assert killed["donated"] is False
+    monkeypatch.delenv("REPRO_NO_DONATE")
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    forced = stream_secded_scrub(corrupted, chunk_size=64, collect=True)
+    for got in (undonated, killed, forced):
+        for k in ("clean", "corrected", "uncorrectable", "n_words"):
+            assert got[k] == want[k], k
+        np.testing.assert_array_equal(got["codewords"], want["codewords"])
+
+
+def test_chunk_jitted_consumes_donated_buffer():
+    """The donated chunk arg must actually be donated: after the call the
+    input jax buffer is deleted (XLA reused it), and the program still
+    computed the right thing.  This is the safety template — the streaming
+    driver never touches a chunk array after its _chunk_call."""
+    _, corrupted = _crafted_words(n=64, n_single=8, n_double=0)
+
+    from repro.core.streaming import _scrub_impl
+    prog = substrate._chunk_jitted("test_scrub_donate", _scrub_impl,
+                                   dict(pallas=False), (0,))
+    donated = jnp.asarray(corrupted)
+    fixed, status = prog(donated)
+    assert donated.is_deleted(), \
+        "donate_argnums=(0,) did not consume the chunk buffer"
+    with pytest.raises(RuntimeError):
+        np.asarray(donated)  # use-after-donate must be a loud error
+    assert int((np.asarray(status) == 1).sum()) == 8
+    assert fixed.shape == corrupted.shape and fixed.dtype == jnp.int32
+
+
+def test_no_donate_env_keeps_buffer_alive(monkeypatch):
+    monkeypatch.setenv("REPRO_NO_DONATE", "1")
+    assert substrate.donation_enabled() is False
+    _, corrupted = _crafted_words(n=32, n_single=4, n_double=0)
+
+    from repro.core.streaming import _scrub_impl
+    prog = substrate._chunk_jitted("test_scrub_nodonate", _scrub_impl,
+                                   dict(pallas=False), (0,))
+    kept = jnp.asarray(corrupted)
+    fixed, status = prog(kept)
+    assert not kept.is_deleted(), \
+        "REPRO_NO_DONATE=1 must zero donate_argnums"
+    np.testing.assert_array_equal(np.asarray(kept), corrupted)  # readable
+    assert int((np.asarray(status) == 1).sum()) == 4
+
+
+def test_donation_keys_the_chunk_cache(monkeypatch):
+    """Flipping the kill switch mid-process must compile a SEPARATE program
+    (effective donate is part of the cache key), never reuse the donating
+    one."""
+    from repro.core.streaming import _scrub_impl
+    name = "test_scrub_cachekey"
+    p1 = substrate._chunk_jitted(name, _scrub_impl, dict(pallas=False), (0,))
+    monkeypatch.setenv("REPRO_NO_DONATE", "1")
+    p2 = substrate._chunk_jitted(name, _scrub_impl, dict(pallas=False), (0,))
+    assert p1 is not p2
+    monkeypatch.delenv("REPRO_NO_DONATE")
+    p3 = substrate._chunk_jitted(name, _scrub_impl, dict(pallas=False), (0,))
+    assert p3 is p1
+
+
+def test_scrub_factory_source_requires_n_words():
+    with pytest.raises(ValueError, match="n_words"):
+        stream_secded_scrub(lambda lo, hi: np.zeros((hi - lo, 72), np.int32))
+
+
+def test_scrub_factory_source_streams_without_full_array():
+    """Chunk-factory mode: only one chunk is ever resident; counts match the
+    dense-array run bit for bit."""
+    _, corrupted = _crafted_words()
+    want = stream_secded_scrub(corrupted, chunk_size=64)
+    got = stream_secded_scrub(lambda lo, hi: corrupted[lo:hi], 200,
+                              chunk_size=64)
+    assert {k: got[k] for k in ("clean", "corrected", "uncorrectable")} \
+        == {k: want[k] for k in ("clean", "corrected", "uncorrectable")}
+
+
+def test_scrub_rejects_misshapen_chunk():
+    with pytest.raises(ValueError, match="shape"):
+        stream_secded_scrub(lambda lo, hi: np.zeros((hi - lo, 64), np.int32),
+                            100, chunk_size=50)

@@ -1,0 +1,232 @@
+"""Backend authority, kernel registry, and tile autotuner contracts.
+
+The dispatch layer's promises: one ``backend_tag()`` authority with a fixed
+resolution order (force_backend > REPRO_FORCE_REF > REPRO_BACKEND > platform
+default), derived ``use_pallas()``/``interpret_mode()`` views that are
+correct on EVERY platform (the old heuristic special-cased TPU and silently
+interpreted on GPU), a registry that stays in lockstep with the nine public
+dispatch sites, and an autotuner that sweeps at most once per (kernel,
+backend, bucket) and never under a trace.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.kernels import ops, ref, tune
+from repro.kernels.registry import GPU, KERNEL_NAMES, REGISTRY, TPU
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _clean_env(monkeypatch):
+    monkeypatch.delenv("REPRO_FORCE_REF", raising=False)
+    monkeypatch.delenv("REPRO_BACKEND", raising=False)
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+
+
+# ------------------------------------------------------------- backend_tag
+
+def test_cpu_default_is_ref():
+    """The perf flip this layer exists for: CPU defaults to the jnp oracle
+    graphs, not interpret-mode Pallas."""
+    assert ops.backend_tag() == "cpu-ref"
+    assert ops.use_pallas() is False
+    assert ops.interpret_mode() is True
+
+
+def test_env_backend_resolves(monkeypatch):
+    monkeypatch.setenv("REPRO_BACKEND", "cpu-pallas-interpret")
+    assert ops.backend_tag() == "cpu-pallas-interpret"
+    assert ops.use_pallas() is True
+    assert ops.interpret_mode() is True
+
+
+def test_force_ref_beats_env_backend(monkeypatch):
+    monkeypatch.setenv("REPRO_BACKEND", "cpu-pallas-interpret")
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    assert ops.backend_tag() == "cpu-ref"
+
+
+def test_invalid_env_backend_raises(monkeypatch):
+    monkeypatch.setenv("REPRO_BACKEND", "tpu-mosaic")  # not valid on cpu
+    with pytest.raises(ValueError, match="REPRO_BACKEND"):
+        ops.backend_tag()
+    monkeypatch.setenv("REPRO_BACKEND", "interpret-mode")  # legacy literal
+    with pytest.raises(ValueError):
+        ops.backend_tag()
+
+
+def test_force_backend_nests_and_restores(monkeypatch):
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    with ops.force_backend("cpu-pallas-interpret"):
+        # stronger than every env var, including FORCE_REF
+        assert ops.backend_tag() == "cpu-pallas-interpret"
+        with ops.force_backend("cpu-ref"):
+            assert ops.backend_tag() == "cpu-ref"
+        assert ops.backend_tag() == "cpu-pallas-interpret"
+    assert ops.backend_tag() == "cpu-ref"
+
+
+def test_force_backend_invalid_tag_raises():
+    with pytest.raises(ValueError, match="invalid"):
+        with ops.force_backend("gpu-triton"):  # wrong platform
+            pass
+    assert ops.backend_tag() == "cpu-ref"  # stack not corrupted
+
+
+def test_gpu_host_would_compile_not_interpret(monkeypatch):
+    """The bug this PR fixes: the old ``interpret_mode()`` special-cased TPU
+    alone, so a GPU host silently ran every kernel interpreted.  With the
+    platform stubbed to gpu, the default tag must be the compiled Triton
+    route and ``interpret_mode()`` must be False."""
+    monkeypatch.setattr(ops, "_platform", lambda: "gpu")
+    assert ops.backend_tag() == GPU
+    assert ops.use_pallas() is True
+    assert ops.interpret_mode() is False
+    assert set(ops.valid_tags()) == {"gpu-ref", "gpu-pallas-interpret", GPU}
+
+
+def test_tpu_host_defaults_to_mosaic(monkeypatch):
+    monkeypatch.setattr(ops, "_platform", lambda: "tpu")
+    assert ops.backend_tag() == TPU
+    assert ops.interpret_mode() is False
+
+
+# ---------------------------------------------------------------- registry
+
+def test_registry_covers_the_nine_dispatch_sites():
+    assert KERNEL_NAMES == (
+        "secded_encode", "secded_syndrome", "fail_prob", "fail_prob_op",
+        "bit_signature", "bank_sched", "diva_shuffle", "rc_transient",
+        "wkv6")
+    for name in KERNEL_NAMES:
+        assert callable(getattr(ops, name)), name
+
+
+def test_registry_specs_well_formed():
+    for name, spec in REGISTRY.items():
+        assert spec.name == name
+        assert spec.tile_space[0] == {}, \
+            f"{name}: tile_space[0] must be the do-nothing default"
+        assert callable(spec.pallas) and callable(spec.bucket)
+        # oracle is LATE-BOUND on the ref module (monkeypatch visibility)
+        assert spec.oracle is getattr(ref, name)
+    assert REGISTRY["wkv6"].compiled == (TPU,), \
+        "wkv6's VMEM scratch is TPU-only; GPU must fall back to the oracle"
+
+
+def test_oracle_dispatch_is_late_bound(monkeypatch):
+    calls = []
+    orig = ref.secded_encode
+    monkeypatch.setattr(ref, "secded_encode",
+                        lambda *a, **k: calls.append(1) or orig(*a, **k))
+    data = RNG.integers(0, 2, (8, 64)).astype(np.int32)
+    with ops.force_backend("cpu-ref"):
+        ops.secded_encode(data)
+    assert calls, "registry captured the oracle at import time — " \
+                  "monkeypatching ref.<name> must reach dispatch"
+
+
+def test_wkv6_compiled_route_falls_back_to_oracle_on_gpu(monkeypatch):
+    """A kernel with no compiled lowering on this hardware routes to its
+    oracle (counted as <plat>-ref), never silently interprets."""
+    monkeypatch.setattr(ops, "_platform", lambda: "gpu")
+    route, tag = ops._resolve(REGISTRY["wkv6"], None)
+    assert (route, tag) == ("ref", "gpu-ref")
+    route, tag = ops._resolve(REGISTRY["secded_encode"], None)
+    assert (route, tag) == ("compiled", GPU)
+
+
+def test_explicit_pallas_true_overrides_ref_tag():
+    """pallas=True on a *-ref tag forces the interpret route — the
+    test_memsim convention for exercising the kernel on CPU."""
+    route, tag = ops._resolve(REGISTRY["secded_encode"], True)
+    assert (route, tag) == ("interpret", "cpu-pallas-interpret")
+    route, tag = ops._resolve(REGISTRY["secded_encode"], False)
+    assert (route, tag) == ("ref", "cpu-ref")
+
+
+# --------------------------------------------------------------- autotuner
+
+def _sweeps(kernel: str, backend: str) -> int:
+    return int(obs.REGISTRY.value("repro_kernel_tune_total",
+                                  kernel=kernel, backend=backend))
+
+
+def test_autotune_sweeps_once_per_bucket(monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    tune.clear()
+    code = RNG.integers(0, 2, (100, 72)).astype(np.int32)
+    before = _sweeps("secded_syndrome", "cpu-pallas-interpret")
+    with ops.force_backend("cpu-pallas-interpret"):
+        a = ops.secded_syndrome(code)
+        b = ops.secded_syndrome(code)          # same bucket: cache hit
+        c = ops.secded_syndrome(code[:97])     # 97 -> same pow2 bucket (128)
+    assert _sweeps("secded_syndrome", "cpu-pallas-interpret") == before + 1
+    win = tune.lookup("secded_syndrome", "cpu-pallas-interpret",
+                      tune.bucket_pow2(100))
+    assert win is not None and win in [dict(t) for t in
+                                       REGISTRY["secded_syndrome"].tile_space]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(c),
+                                  np.asarray(ref.secded_syndrome(code[:97])))
+    tune.clear()
+
+
+def test_autotune_never_sweeps_under_a_trace(monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    tune.clear()
+    code = RNG.integers(0, 2, (64, 72)).astype(np.int32)
+    before = _sweeps("secded_syndrome", "cpu-pallas-interpret")
+    with ops.force_backend("cpu-pallas-interpret"):
+        out = jax.jit(lambda c: ops.secded_syndrome(c))(code)
+    assert _sweeps("secded_syndrome", "cpu-pallas-interpret") == before, \
+        "tracer args must resolve to defaults silently, never time a sweep"
+    assert tune.lookup("secded_syndrome", "cpu-pallas-interpret",
+                       tune.bucket_pow2(64)) is None
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.secded_syndrome(code)))
+    tune.clear()
+
+
+def test_autotune_disabled_on_interpret_without_optin():
+    tune.clear()
+    code = RNG.integers(0, 2, (32, 72)).astype(np.int32)
+    before = _sweeps("secded_syndrome", "cpu-pallas-interpret")
+    with ops.force_backend("cpu-pallas-interpret"):
+        ops.secded_syndrome(code)
+    assert _sweeps("secded_syndrome", "cpu-pallas-interpret") == before
+
+
+def test_tune_cache_persistence_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    tune.clear()
+    code = RNG.integers(0, 2, (40, 72)).astype(np.int32)
+    with ops.force_backend("cpu-pallas-interpret"):
+        ops.secded_syndrome(code)
+    bucket = tune.bucket_pow2(40)
+    win = tune.lookup("secded_syndrome", "cpu-pallas-interpret", bucket)
+    assert win is not None
+    path = tune.save_cache(tmp_path / "TUNE_kernels.json")
+    tune.clear()
+    assert tune.lookup("secded_syndrome", "cpu-pallas-interpret",
+                       bucket) is None
+    assert tune.load_cache(path) >= 1
+    assert tune.lookup("secded_syndrome", "cpu-pallas-interpret",
+                       bucket) == win
+    # loaded winners are plain JSON round-trippable dicts
+    assert json.loads(path.read_text())
+    tune.clear()
+
+
+def test_bucket_pow2():
+    assert [tune.bucket_pow2(n) for n in (1, 2, 3, 100, 128, 129)] == \
+        [1, 2, 4, 128, 128, 256]
+
+
+def test_load_cache_missing_file_is_zero(tmp_path):
+    assert tune.load_cache(tmp_path / "absent.json") == 0

@@ -73,3 +73,132 @@ def test_ops_dispatch_ref_mode(monkeypatch):
     data = RNG.integers(0, 2, (16, 64)).astype(np.int32)
     np.testing.assert_array_equal(np.asarray(ops.secded_encode(data)),
                                   np.asarray(ref.secded_encode(data)))
+
+
+# -------------------------------------------------- tiled-dispatch contracts
+#
+# The masked-tail + tile-invariance template every tiled kernel follows:
+# pad-to-tile + slice-back must be invisible at ANY tile, including tiles
+# that do not divide the axis.  Integer kernels assert EXACT equality;
+# float kernels get tolerances — across *different* tiles XLA may fuse the
+# single-block and multi-block grid programs differently (FMA contraction),
+# which is ulp-scale jitter, not a semantic difference (ARCHITECTURE 3i).
+
+@pytest.mark.parametrize("n,tile", [(1000, 128), (1000, 7), (5, 8),
+                                    (2049, 512)])
+def test_secded_masked_tail_non_dividing_tiles(n, tile):
+    """The satellite template: SECDED parity at tiles that do NOT divide the
+    codeword count (and a tile larger than the input)."""
+    data = RNG.integers(0, 2, (n, 64)).astype(np.int32)
+    code = RNG.integers(0, 2, (n, 72)).astype(np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.secded_encode(data, tile=tile, pallas=True)),
+        np.asarray(ref.secded_encode(data)))
+    np.testing.assert_array_equal(
+        np.asarray(ops.secded_syndrome(code, tile=tile, pallas=True)),
+        np.asarray(ref.secded_syndrome(code)))
+
+
+@pytest.mark.parametrize("tile", [None, 64, 100, 7])
+def test_shuffle_and_signature_tile_invariant_exact(tile):
+    b = RNG.integers(0, 2, (300, 576)).astype(np.int32)
+    counts = RNG.integers(0, 2 ** 16, (150, 512)).astype(np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.diva_shuffle(b, tile=tile, pallas=True)),
+        np.asarray(ref.diva_shuffle(b)))
+    np.testing.assert_array_equal(
+        np.asarray(ops.bit_signature(counts, nbits=9, tile=tile,
+                                     pallas=True)),
+        np.asarray(ref.bit_signature(counts, 9)))
+
+
+@pytest.mark.parametrize("q_tile", [None, 3, 8, 16])
+def test_bank_sched_tile_invariant_exact(q_tile):
+    """Queue tiling pads with q_valid=0 slots (arbitration key 0, sliced
+    off); per-candidate scoring is independent, so all-int outputs are
+    exact at any q_tile, dividing or not."""
+    rng = np.random.default_rng(11)
+    args = (rng.integers(0, 16, 10).astype(np.int32),
+            rng.integers(0, 50, 10).astype(np.int32),
+            rng.integers(0, 2, 10).astype(np.int32),
+            rng.integers(0, 400, 10).astype(np.int32),
+            np.array([1, 1, 0, 1, 1, 1, 0, 1, 1, 1], np.int32),
+            rng.integers(-1, 50, 16).astype(np.int32),
+            rng.integers(0, 500, 16).astype(np.int32),
+            rng.integers(-100, 500, 16).astype(np.int32),
+            rng.integers(0, 500, 2).astype(np.int32),
+            rng.integers(-100, 400, 2).astype(np.int32),
+            rng.integers(-100, 400, 2).astype(np.int32),
+            np.int32(120),
+            rng.integers(4, 30, (16, 6)).astype(np.int32),
+            (np.arange(16) % 2).astype(np.int32),
+            (np.arange(16) % 2).astype(np.int32))
+    kw = dict(tbl=4, trrd=5, tfaw=24, use_bus=True, use_act=True)
+    want = [np.asarray(o) for o in ref.bank_sched(*args, **kw)]
+    got = ops.bank_sched(*args, q_tile=q_tile, pallas=True, **kw)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), w)
+
+
+@pytest.mark.parametrize("row_tile", [64, 96, 100])
+def test_fail_prob_row_tiles_match_oracle_to_float_tolerance(row_tile):
+    """Row tiling (masked tail included: 96/100 do not divide 512) vs the
+    oracle.  NOT bitwise across tiles — multi-block grids fuse differently
+    from the single-block program, amplified by erf-tail cancellation at
+    tiny p — but bounded well inside the model's meaningful precision."""
+    rng = np.random.default_rng(5)
+    row_src = rng.integers(0, 512, 512).astype(np.int32)
+    d_mat = np.linspace(0.1, 1.0, 4).astype(np.float32)
+    coeffs = np.array([3.9, 2.1, 0.4, 0.8, 0.4, 7.5, 0.15, 3e-6, 3.5],
+                      np.float32)
+    want = np.asarray(ref.fail_prob(row_src, d_mat, coeffs, cols=128))
+    got = np.asarray(ops.fail_prob(row_src, d_mat, coeffs, cols=128,
+                                   row_tile=row_tile, pallas=True))
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-3)
+    op_coeffs = np.concatenate(
+        [coeffs, np.array([1.2, 4.0, 0.4, 1.0, 0.3, 1.2], np.float32)])
+    want_op = np.asarray(ref.fail_prob_op(row_src, d_mat, op_coeffs,
+                                          cols=128, voltage=True,
+                                          retention=True))
+    got_op = np.asarray(ops.fail_prob_op(row_src, d_mat, op_coeffs, cols=128,
+                                         voltage=True, retention=True,
+                                         row_tile=row_tile, pallas=True))
+    np.testing.assert_allclose(got_op, want_op, atol=1e-5, rtol=1e-3)
+
+
+def test_fail_prob_default_tile_bitwise_matches_untiled():
+    """row_tile=None must keep the EXACT pre-registry graph (single-block
+    grid) — the existing 1-f32-ulp oracle contracts ride on this."""
+    rng = np.random.default_rng(6)
+    row_src = rng.integers(0, 128, 128).astype(np.int32)
+    d_mat = np.linspace(0.1, 1.0, 3).astype(np.float32)
+    coeffs = np.array([3.9, 2.1, 0.4, 0.8, 0.4, 7.5, 0.15, 3e-6, 3.5],
+                      np.float32)
+    from repro.kernels.fail_prob import fail_prob as fp_pallas
+    np.testing.assert_array_equal(
+        np.asarray(ops.fail_prob(row_src, d_mat, coeffs, cols=64,
+                                 pallas=True)),
+        np.asarray(fp_pallas(row_src, d_mat, coeffs, cols=64,
+                             interpret=True)))
+
+
+@pytest.mark.parametrize("tile", [32, 100])
+def test_rc_transient_tile_variants_within_tolerance(tile):
+    rf = np.linspace(0.02, 0.98, 130)
+    cf = np.linspace(0.0, 1.0, 130)
+    base = ops.rc_transient(rf, cf, pallas=True)
+    tiled = ops.rc_transient(rf, cf, tile=tile, pallas=True)
+    for k in ("sense_t", "v_cell", "v_probe"):
+        np.testing.assert_allclose(np.asarray(tiled[k]), np.asarray(base[k]),
+                                   atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("tile_bh,chunk", [(4, None), (None, 128), (3, 50)])
+def test_wkv6_tile_variants_within_tolerance(tile_bh, chunk):
+    r, k, v, w = (RNG.normal(0, 0.5, (2, 96, 2, 16)).astype(np.float32)
+                  for _ in range(4))
+    u = RNG.normal(0, 0.1, (2, 16)).astype(np.float32)
+    base = np.asarray(ops.wkv6(r, k, v, w, u, pallas=True), np.float32)
+    tiled = np.asarray(ops.wkv6(r, k, v, w, u, tile_bh=tile_bh, chunk=chunk,
+                                pallas=True), np.float32)
+    np.testing.assert_allclose(tiled, base, rtol=3e-4, atol=3e-4)

@@ -74,11 +74,15 @@ def test_shuffling_gain_population_force_ref_matches(monkeypatch):
     The dispatch mode is a static jit arg, so the env toggle retraces and the
     ref oracle genuinely runs (same shapes notwithstanding).  The baseline is
     pinned to the Pallas path so the toggle is exercised even when the whole
-    session runs ref-forced (the jnp-oracles CI leg)."""
+    session runs ref-forced (the jnp-oracles CI leg) — and, since the CPU
+    default flipped to ``cpu-ref``, so the FORCE_REF call is a genuine
+    static-arg flip (fresh trace through the oracle) rather than a jit cache
+    hit on the very program the baseline already compiled."""
     from repro.core import substrate
     from repro.kernels import ref
     probs = _design_profiles(4, seed=7)
     monkeypatch.delenv("REPRO_FORCE_REF", raising=False)
+    monkeypatch.setenv("REPRO_BACKEND", "cpu-pallas-interpret")
     pallas = shuffling_gain_population(probs, seeds=np.arange(4),
                                        n_accesses=111)
     calls = []
